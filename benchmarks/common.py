@@ -1,0 +1,67 @@
+"""Shared benchmark plumbing.
+
+Every benchmark emits rows ``name,us_per_call,derived`` (CSV) and dumps full
+JSON to ``benchmarks/results/<module>.json`` for EXPERIMENTS.md.
+
+Scale control: ``REPRO_BENCH_SCALE`` (default 0.08) shrinks trace lengths;
+1.0 reproduces the paper-scaled traces of ``repro.traces.TRACE_SPECS``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+from repro.core import make_policy, simulate
+from repro.traces import make_trace
+
+RESULTS_DIR = pathlib.Path(__file__).parent / "results"
+
+PAPER_TRACES = ("msr2", "systor2", "tencent1", "cdn1")
+# Cache sizes as fractions of total unique bytes; the two largest model the
+# paper's "practically unbounded" 1TB/10TB points (AdaptSize pathology, §5.2).
+CACHE_FRACS = (0.001, 0.01, 0.1, 0.5)
+
+
+def bench_scale() -> float:
+    return float(os.environ.get("REPRO_BENCH_SCALE", "0.08"))
+
+
+def get_trace(name: str, seed: int = 0):
+    return make_trace(name, seed=seed, scale=bench_scale())
+
+
+def run_policy(name: str, trace, cap: int, **kw) -> dict:
+    """Simulate one policy over one trace; returns a result row."""
+    if "wtlfu" in name and "expected_entries" not in kw:
+        kw["expected_entries"] = max(64, int(cap / max(1.0, trace.mean_object_size)))
+    if name == "belady":
+        kw["trace"] = trace
+    policy = make_policy(name, cap, **kw)
+    t0 = time.perf_counter()
+    st = simulate(policy, trace)
+    wall = time.perf_counter() - t0
+    return {
+        "policy": name,
+        "trace": trace.name,
+        "capacity": cap,
+        "accesses": st.accesses,
+        "hit_ratio": round(st.hit_ratio, 5),
+        "byte_hit_ratio": round(st.byte_hit_ratio, 5),
+        "victims_per_access": round(st.victims_per_access, 5),
+        "used_frac": round(policy.used_bytes() / cap, 5),
+        "us_per_access": round(wall / max(1, st.accesses) * 1e6, 3),
+        "wall_s": round(wall, 3),
+    }
+
+
+def emit(bench: str, rows: list[dict], derived_key: str = "hit_ratio") -> None:
+    """Print CSV rows and persist JSON."""
+    RESULTS_DIR.mkdir(exist_ok=True)
+    with open(RESULTS_DIR / f"{bench}.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    for r in rows:
+        label = f"{bench}/{r.get('trace','-')}/{r.get('policy', r.get('label','-'))}/cap={r.get('capacity','-')}"
+        print(f"{label},{r.get('us_per_access', 0)},{r.get(derived_key, '')}")

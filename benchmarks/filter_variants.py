@@ -1,0 +1,31 @@
+"""Paper Figures 9 & 10: the 18 W-TinyLFU variants (IV/QV/AV x six Main
+eviction policies) on hit-ratio and byte-hit-ratio."""
+
+from __future__ import annotations
+
+import itertools
+
+from repro.core.tinylfu import ADMISSIONS, EVICTIONS
+
+from .common import CACHE_FRACS, PAPER_TRACES, emit, get_trace, run_policy
+
+# The paper's six: SLRU + 4 sampled + random ("lru" is our extra sanity point).
+PAPER_EVICTIONS = tuple(e for e in EVICTIONS if e != "lru")
+
+
+def main(traces=PAPER_TRACES, fracs=CACHE_FRACS) -> list[dict]:
+    rows = []
+    for tname in traces:
+        tr = get_trace(tname)
+        for frac in fracs:
+            cap = max(1, int(tr.total_object_bytes * frac))
+            for adm, ev in itertools.product(ADMISSIONS, PAPER_EVICTIONS):
+                r = run_policy(f"wtlfu-{adm}-{ev}", tr, cap)
+                r["frac"] = frac
+                rows.append(r)
+    emit("filter_variants", rows, derived_key="hit_ratio")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""§Perf hillclimb driver: lowers a cell under named variants and records
+the roofline deltas. Run in a fresh process (512 fake devices).
+
+    PYTHONPATH=src python -m benchmarks.hillclimb <cell>
+
+Variants are concrete, lowering-visible changes (sharding policy knobs,
+config tweaks); results append to benchmarks/results/hillclimb_<cell>.json
+and feed benchmarks/perf_log.md.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import sys  # noqa: E402
+
+from repro.distributed.sharding import ShardingPolicy  # noqa: E402
+from repro.launch.dryrun import lower_cell  # noqa: E402
+
+RES = pathlib.Path(__file__).parent / "results"
+
+
+def run_variant(arch, shape, name, *, policy=None, opt_overrides=None):
+    print(f"--- {arch}/{shape} [{name}]", flush=True)
+    rec = lower_cell(arch, shape, policy=policy, opt_overrides=opt_overrides)
+    t = rec["roofline"]
+    row = {
+        "variant": name,
+        "arch": arch,
+        "shape": shape,
+        "compute_s": t["compute_s"],
+        "memory_s": t["memory_s"],
+        "collective_s": t["collective_s"],
+        "dominant": t["dominant"],
+        "bound_s": t["step_s_lower_bound"],
+        "roofline_fraction": t["roofline_fraction"],
+        "peak_gib": rec["memory"]["peak_gib"],
+        "collective_counts": t["collective_counts"],
+    }
+    print(json.dumps(row, indent=1), flush=True)
+    return row
+
+
+CELLS = {
+    # HC1 — worst roofline fraction: tiny model, replicated attention
+    "smollm_decode": [
+        ("baseline", dict()),
+        # weight-stationary serving: params replicated over data (no
+        # per-layer FSDP all-gather at decode)
+        ("weight_stationary", dict(policy=ShardingPolicy(fsdp=False))),
+    ],
+    # HC2 — most collective-bound: MoE EP boundary
+    "deepseek_train": [
+        ("baseline", dict()),
+        ("no_seq_shard", dict(policy=ShardingPolicy(seq_shard=False))),
+    ],
+    # HC3 — paper-representative: MLA latent KV serving
+    "deepseek_decode": [
+        ("baseline", dict()),
+        ("weight_stationary", dict(policy=ShardingPolicy(fsdp=False))),
+        ("latent_feature_shard", dict(policy=ShardingPolicy(
+            fsdp=False, shard_mla_latent=True))),
+    ],
+}
+
+TARGETS = {
+    "smollm_decode": ("smollm-135m", "decode_32k"),
+    "deepseek_train": ("deepseek-v2-lite-16b", "train_4k"),
+    "deepseek_decode": ("deepseek-v2-lite-16b", "decode_32k"),
+}
+
+
+def main():
+    cell = sys.argv[1]
+    arch, shape = TARGETS[cell]
+    rows = []
+    for name, kw in CELLS[cell]:
+        try:
+            rows.append(run_variant(arch, shape, name, **kw))
+        except Exception as e:  # noqa: BLE001
+            rows.append({"variant": name, "error": f"{type(e).__name__}: {e}"})
+            print("ERROR", name, e, flush=True)
+    RES.mkdir(exist_ok=True)
+    out = RES / f"hillclimb_{cell}.json"
+    existing = json.loads(out.read_text()) if out.exists() else []
+    existing.extend(rows)
+    out.write_text(json.dumps(existing, indent=1))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

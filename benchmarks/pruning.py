@@ -1,0 +1,34 @@
+"""Paper Figure 7: victims examined per access for AV, with vs without the
+early-pruning optimization, across traces and cache sizes. The paper reports
+a x4-x16 reduction."""
+
+from __future__ import annotations
+
+from .common import PAPER_TRACES, emit, get_trace, run_policy
+
+FRACS = (0.001, 0.01, 0.1)  # paper: 10MB / 1GB / 100GB per trace
+
+
+def main(traces=PAPER_TRACES) -> list[dict]:
+    rows = []
+    for name in traces:
+        tr = get_trace(name)
+        for frac in FRACS:
+            cap = max(1, int(tr.total_object_bytes * frac))
+            for pruning in (True, False):
+                r = run_policy("wtlfu-av", tr, cap, early_pruning=pruning)
+                r["policy"] = f"av-{'pruned' if pruning else 'full'}"
+                r["frac"] = frac
+                rows.append(r)
+    # annotate reduction factors
+    for i in range(0, len(rows), 2):
+        full = rows[i + 1]["victims_per_access"]
+        pruned = rows[i]["victims_per_access"]
+        factor = (full / pruned) if pruned > 0 else float("inf")
+        rows[i]["pruning_factor"] = rows[i + 1]["pruning_factor"] = round(factor, 2)
+    emit("pruning", rows, derived_key="victims_per_access")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

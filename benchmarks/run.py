@@ -1,0 +1,47 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [bench ...]``
+
+Emits ``name,us_per_call,derived`` CSV rows and writes JSON to
+``benchmarks/results/``. Scale with REPRO_BENCH_SCALE (default 0.08).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import filter_variants, overhead, pruning, state_of_art, trace_stats
+
+    benches = {
+        "trace_stats": trace_stats.main,  # Table 1 / Fig 8
+        "pruning": pruning.main,  # Fig 7
+        "filter_variants": filter_variants.main,  # Figs 9-10
+        "state_of_art": state_of_art.main,  # Figs 11-12
+        "overhead": overhead.main,  # Fig 13 / Table 2
+    }
+    try:  # serving integration bench (needs the serving stack)
+        from . import serving_cache
+
+        benches["serving_cache"] = serving_cache.main
+    except ImportError:
+        pass
+    try:  # kernel micro-benchmarks (interpret mode)
+        from . import kernel_bench
+
+        benches["kernel_bench"] = kernel_bench.main
+    except ImportError:
+        pass
+
+    selected = sys.argv[1:] or list(benches)
+    print("name,us_per_call,derived")
+    for name in selected:
+        t0 = time.perf_counter()
+        benches[name]()
+        print(f"# {name} done in {time.perf_counter() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

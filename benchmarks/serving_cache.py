@@ -1,0 +1,96 @@
+"""Serving integration benchmark: the paper's admission policies managing an
+LLM prefix cache (our first-class integration; DESIGN.md §2).
+
+Synthetic request stream: a Zipf-popular population of prompt *templates*
+(system prompts / few-shot headers of very different lengths — the
+variable-size regime), each request = template + unique user suffix.
+Objects = template prefixes; size ∝ tokens x per-arch KV bytes.
+
+Metrics per policy: request hit ratio (paper hit-ratio analog),
+token hit ratio (byte-hit-ratio analog = prefill compute saved),
+us/request policy overhead. Bookkeeping-level (no tensors) so streams are
+large; tensor-level correctness is covered by tests/test_serving.py.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.serving import PrefixCache, PrefixCacheConfig, kv_bytes_per_token
+
+from .common import bench_scale, emit
+
+POLICIES = ("lru", "wtlfu-av", "wtlfu-qv", "wtlfu-iv", "gdsf", "adaptsize", "lhd")
+ARCHS = ("command-r-35b", "deepseek-v2-lite-16b", "smollm-135m")
+
+
+def make_stream(n_requests: int, seed: int = 0):
+    """(template_id, template_len, suffix_len) per request."""
+    rng = np.random.default_rng(seed)
+    n_templates = 400
+    # template lengths: mixture of short chat headers and huge few-shot docs
+    lens = np.where(
+        rng.random(n_templates) < 0.7,
+        rng.integers(64, 512, n_templates),
+        rng.integers(2048, 16384, n_templates),
+    )
+    pmf = (np.arange(1, n_templates + 1) ** -0.9)
+    pmf /= pmf.sum()
+    ids = rng.choice(n_templates, size=n_requests, p=pmf)
+    suffix = rng.integers(8, 64, size=n_requests)
+    return ids, lens, suffix
+
+
+def run_policy(policy: str, arch: str, n_requests: int, ws_frac: float) -> dict:
+    """``ws_frac``: cache capacity as a fraction of the template working
+    set's KV bytes (the contended regime the paper studies)."""
+    cfg = get_config(arch)
+    bpt = kv_bytes_per_token(cfg)
+    ids, lens, suffix = make_stream(n_requests)
+    templates = [
+        [tid * 1_000_003 + j for j in range(int(lens[tid]))] for tid in range(len(lens))
+    ]
+    working_set = int(lens.sum()) * bpt
+    capacity = max(bpt * 64, int(working_set * ws_frac))
+    cache = PrefixCache(
+        PrefixCacheConfig(
+            capacity_bytes=capacity, block_size=16, bytes_per_token=bpt, policy=policy
+        )
+    )
+    t0 = time.perf_counter()
+    for i in range(n_requests):
+        tokens = templates[int(ids[i])]
+        cache.lookup(tokens + [10**9 + i * 100 + j for j in range(int(suffix[i]))])
+        cache.offer(tokens)
+    wall = time.perf_counter() - t0
+    s = cache.stats()
+    s.update(
+        arch=arch,
+        policy=policy,
+        trace=f"serving-{arch}",
+        capacity=capacity,
+        ws_frac=ws_frac,
+        hit_ratio=s["request_hit_ratio"],
+        byte_hit_ratio=s["token_hit_ratio"],
+        us_per_access=round(wall / n_requests * 1e6, 2),
+        bytes_per_token=bpt,
+    )
+    return s
+
+
+def main() -> list[dict]:
+    n_requests = max(400, int(20_000 * bench_scale()))
+    rows = []
+    for arch in ARCHS:
+        for ws_frac in (0.05, 0.2):
+            for policy in POLICIES:
+                rows.append(run_policy(policy, arch, n_requests, ws_frac))
+    emit("serving_cache", rows, derived_key="token_hit_ratio")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

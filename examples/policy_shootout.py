@@ -1,0 +1,30 @@
+"""Policy shootout across all four trace classes (MSR / SYSTOR / CDN /
+TENCENT): the paper's Figure 11/12 in miniature, printed as a table.
+
+    PYTHONPATH=src python examples/policy_shootout.py
+"""
+
+from repro.core import make_policy, simulate
+from repro.traces import make_trace
+
+POLICIES = ("lru", "adaptsize", "lhd", "gdsf", "wtlfu-qv", "wtlfu-av")
+TRACES = ("msr2", "systor2", "tencent1", "cdn1")
+
+
+def main():
+    for tname in TRACES:
+        tr = make_trace(tname, seed=0, scale=0.03)
+        cap = int(tr.total_object_bytes * 0.02)
+        entries = max(64, int(cap / tr.mean_object_size))
+        print(f"\n=== {tname}: cache 2% of {tr.total_object_bytes/1e9:.1f} GB ===")
+        print(f"{'policy':12s} {'hit%':>8s} {'byte-hit%':>10s} {'used%':>7s}")
+        for name in POLICIES:
+            kw = {"expected_entries": entries} if "wtlfu" in name else {}
+            p = make_policy(name, cap, **kw)
+            st = simulate(p, tr)
+            print(f"{name:12s} {st.hit_ratio:8.2%} {st.byte_hit_ratio:10.2%} "
+                  f"{p.used_bytes()/cap:7.1%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""The paper's primary contribution: size-aware cache admission policies.
+
+Public surface:
+
+* :class:`SizeAwareWTinyLFU` — W-TinyLFU with IV / QV / AV size-aware
+  admission (the paper, Section 4) over pluggable Main-cache eviction.
+* Baselines: LRU, SampledLFU, GDSF, AdaptSize, LHD, LRB-lite, BeladySize.
+* :func:`make_policy` — name-based factory used by benchmarks, the serving
+  prefix cache and the data-pipeline shard cache.
+* :func:`simulate` / :class:`AccessTrace` / :class:`CacheStats` — the
+  trace-driven evaluation instrument.
+"""
+
+from __future__ import annotations
+
+from .baselines import AdaptSizeCache, GDSFCache, LHDCache, LRUCache, SampledLFUCache
+from .belady import BeladySizeCache, belady_boundary
+from .cache_api import AccessTrace, CachePolicy, CacheStats, simulate
+from .eviction import make_eviction
+from .lrb import LRBLiteCache
+from .sketch import FrequencySketch
+from .tinylfu import ADMISSIONS, EVICTIONS, SizeAwareWTinyLFU
+
+__all__ = [
+    "AccessTrace",
+    "CachePolicy",
+    "CacheStats",
+    "FrequencySketch",
+    "SizeAwareWTinyLFU",
+    "LRUCache",
+    "SampledLFUCache",
+    "GDSFCache",
+    "AdaptSizeCache",
+    "LHDCache",
+    "LRBLiteCache",
+    "BeladySizeCache",
+    "belady_boundary",
+    "simulate",
+    "make_policy",
+    "make_eviction",
+    "ADMISSIONS",
+    "EVICTIONS",
+    "POLICY_NAMES",
+]
+
+POLICY_NAMES = (
+    "lru",
+    "sampled_lfu",
+    "gdsf",
+    "adaptsize",
+    "lhd",
+    "lrb",
+    "belady",
+    # W-TinyLFU variants: wtlfu-<admission>[-<eviction>]
+    "wtlfu-iv",
+    "wtlfu-qv",
+    "wtlfu-av",
+)
+
+
+def make_policy(name: str, capacity: int, **kw):
+    """Instantiate a policy by name.
+
+    W-TinyLFU variants are spelled ``wtlfu-<iv|qv|av>[-<eviction>]`` with
+    eviction defaulting to SLRU (e.g. ``wtlfu-av-sampled_size``). ``belady``
+    requires ``trace=`` (full future knowledge).
+    """
+    name = name.lower()
+    if name == "lru":
+        return LRUCache(capacity, **kw)
+    if name == "sampled_lfu":
+        return SampledLFUCache(capacity, **kw)
+    if name == "gdsf":
+        return GDSFCache(capacity, **kw)
+    if name == "adaptsize":
+        return AdaptSizeCache(capacity, **kw)
+    if name == "lhd":
+        return LHDCache(capacity, **kw)
+    if name == "lrb":
+        return LRBLiteCache(capacity, **kw)
+    if name == "belady":
+        return BeladySizeCache(capacity, **kw)
+    if name.startswith("wtlfu-"):
+        parts = name.split("-", 2)
+        admission = parts[1]
+        eviction = parts[2] if len(parts) > 2 else "slru"
+        return SizeAwareWTinyLFU(capacity, admission=admission, eviction=eviction, **kw)
+    raise ValueError(f"unknown policy {name!r}")

@@ -1,0 +1,437 @@
+"""Size-aware baseline policies the paper compares against (Section 5.2).
+
+* **LRU** — the sanity baseline used to cross-check frameworks (paper §5).
+* **SampledLFU** — Redis/Ristretto-style: sample 5, evict lowest frequency.
+* **GDSF** — Greedy-Dual-Size-Frequency [Cherkasova'98]: priority
+  ``L + freq * cost / size`` with an inflation clock ``L``; O(log n) heap.
+* **AdaptSize** [Berger et al., NSDI'17] — probabilistic admission
+  ``P(admit) = exp(-size / c)`` in front of LRU, with ``c`` tuned online by a
+  Che-approximation Markov model over a sliding sample of the request stream.
+  Our tuner is a faithful-in-spirit reimplementation (the pathology the paper
+  highlights — large objects effectively never admitted regardless of free
+  space — is inherent to the admission rule and preserved exactly).
+* **LHD** [Beckmann et al., NSDI'18] — sampled eviction by lowest *hit
+  density* (hit probability per byte-eviction-time), with age-binned hit /
+  eviction histograms refreshed periodically. Our version uses coarsened age
+  bins and explicit-size accounting instead of slab classes (divergence noted
+  in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import heapq
+import math
+import random
+from collections import OrderedDict
+
+from .cache_api import CacheStats
+
+__all__ = ["LRUCache", "SampledLFUCache", "GDSFCache", "AdaptSizeCache", "LHDCache"]
+
+
+class LRUCache:
+    """Plain size-aware LRU with blind admission."""
+
+    def __init__(self, capacity: int, **_kw):
+        self.capacity = int(capacity)
+        self.entries: OrderedDict[int, int] = OrderedDict()
+        self.used = 0
+        self.stats = CacheStats()
+
+    def __contains__(self, key: int) -> bool:
+        return key in self.entries
+
+    def used_bytes(self) -> int:
+        return self.used
+
+    def access(self, key: int, size: int) -> bool:
+        st = self.stats
+        st.accesses += 1
+        st.bytes_requested += size
+        if key in self.entries:
+            self.entries.move_to_end(key)
+            st.hits += 1
+            st.bytes_hit += size
+            return True
+        if size > self.capacity:
+            st.rejections += 1
+            return False
+        while self.used + size > self.capacity:
+            _, vs = self.entries.popitem(last=False)
+            self.used -= vs
+            st.evictions += 1
+            st.victims_examined += 1
+        self.entries[key] = size
+        self.used += size
+        st.admissions += 1
+        return False
+
+
+class SampledLFUCache:
+    """Redis-style sampled LFU: sample 5, evict the least-frequent."""
+
+    SAMPLE = 5
+
+    def __init__(self, capacity: int, seed: int = 0x5EED, **_kw):
+        self.capacity = int(capacity)
+        self.sizes: dict[int, int] = {}
+        self.freq: dict[int, int] = {}
+        self.keys: list[int] = []
+        self.pos: dict[int, int] = {}
+        self.used = 0
+        self.rng = random.Random(seed)
+        self.stats = CacheStats()
+
+    def __contains__(self, key: int) -> bool:
+        return key in self.sizes
+
+    def used_bytes(self) -> int:
+        return self.used
+
+    def _remove(self, key: int) -> None:
+        self.used -= self.sizes.pop(key)
+        self.freq.pop(key, None)
+        i = self.pos.pop(key)
+        last = self.keys.pop()
+        if last != key:
+            self.keys[i] = last
+            self.pos[last] = i
+
+    def access(self, key: int, size: int) -> bool:
+        st = self.stats
+        st.accesses += 1
+        st.bytes_requested += size
+        if key in self.sizes:
+            self.freq[key] = self.freq.get(key, 0) + 1
+            st.hits += 1
+            st.bytes_hit += size
+            return True
+        if size > self.capacity:
+            st.rejections += 1
+            return False
+        while self.used + size > self.capacity:
+            pool = [self.rng.choice(self.keys) for _ in range(min(self.SAMPLE, len(self.keys)))]
+            victim = min(pool, key=lambda k: self.freq.get(k, 0))
+            st.victims_examined += len(pool)
+            self._remove(victim)
+            st.evictions += 1
+        self.sizes[key] = size
+        self.freq[key] = 1
+        self.pos[key] = len(self.keys)
+        self.keys.append(key)
+        self.used += size
+        st.admissions += 1
+        return False
+
+
+class GDSFCache:
+    """Greedy-Dual-Size-Frequency: priority = L + freq/size, lazy-deletion heap."""
+
+    def __init__(self, capacity: int, cost: float = 1.0, **_kw):
+        self.capacity = int(capacity)
+        self.cost = cost
+        self.entries: dict[int, tuple[float, int, int]] = {}  # key -> (pri, freq, size)
+        self.heap: list[tuple[float, int, int]] = []  # (pri, seq, key) lazy heap
+        self.L = 0.0  # inflation clock
+        self.used = 0
+        self._seq = 0
+        self.stats = CacheStats()
+
+    def __contains__(self, key: int) -> bool:
+        return key in self.entries
+
+    def used_bytes(self) -> int:
+        return self.used
+
+    def _push(self, key: int, freq: int, size: int) -> None:
+        pri = self.L + freq * self.cost / size
+        self.entries[key] = (pri, freq, size)
+        self._seq += 1
+        heapq.heappush(self.heap, (pri, self._seq, key))
+
+    def _pop_victim(self) -> tuple[int, float, int]:
+        """Pop the true minimum-priority resident entry (skipping stale heap rows)."""
+        while True:
+            pri, _, key = heapq.heappop(self.heap)
+            ent = self.entries.get(key)
+            if ent is not None and ent[0] == pri:
+                return key, pri, ent[2]
+
+    def access(self, key: int, size: int) -> bool:
+        st = self.stats
+        st.accesses += 1
+        st.bytes_requested += size
+        ent = self.entries.get(key)
+        if ent is not None:
+            _, freq, esize = ent
+            self._push(key, freq + 1, esize)  # re-score with bumped frequency
+            st.hits += 1
+            st.bytes_hit += size
+            return True
+        if size > self.capacity:
+            st.rejections += 1
+            return False
+        while self.used + size > self.capacity:
+            vk, vpri, vsize = self._pop_victim()
+            del self.entries[vk]
+            self.used -= vsize
+            self.L = vpri  # clock inflates to evicted priority
+            st.evictions += 1
+            st.victims_examined += 1
+        self._push(key, 1, size)
+        self.used += size
+        st.admissions += 1
+        return False
+
+
+class AdaptSizeCache:
+    """AdaptSize: exp(-size/c) probabilistic admission + LRU, with tuned c.
+
+    Tuning: every ``reconf_every`` requests, fit the Che-approximation model
+    over a sliding sample of (rate, size) per object and pick the candidate
+    ``c`` (log-spaced grid) that maximizes modeled object hit ratio. This is
+    the same shape as AdaptSize's published Markov tuning; see module
+    docstring for the faithfulness caveat.
+    """
+
+    def __init__(
+        self,
+        capacity: int,
+        *,
+        c_init: float | None = None,
+        reconf_every: int = 100_000,
+        sample_limit: int = 60_000,
+        seed: int = 0x5EED,
+        **_kw,
+    ):
+        self.capacity = int(capacity)
+        self.c = float(c_init if c_init is not None else max(1.0, capacity * 1e-4))
+        self.reconf_every = reconf_every
+        self.sample_limit = sample_limit
+        self.entries: OrderedDict[int, int] = OrderedDict()
+        self.used = 0
+        self.rng = random.Random(seed)
+        self.stats = CacheStats()
+        # sliding window stats for the tuner
+        self._win_count: dict[int, int] = {}
+        self._win_size: dict[int, int] = {}
+        self._win_n = 0
+
+    def __contains__(self, key: int) -> bool:
+        return key in self.entries
+
+    def used_bytes(self) -> int:
+        return self.used
+
+    # -- Che-approximation tuner ------------------------------------------
+    def _model_ohr(self, c: float, counts, sizes, total: int) -> float:
+        """Modeled object hit ratio for admission parameter ``c``.
+
+        With admission probability a_i = exp(-s_i/c) and Che characteristic
+        time T, P(hit_i) ≈ a_i * (1 - exp(-λ_i T)). T solves
+        Σ_i s_i · P(in cache) = capacity; solved by bisection on log T.
+        """
+
+        def occupied(T: float) -> float:
+            occ = 0.0
+            for cnt, s in zip(counts, sizes):
+                lam = cnt / total
+                a = math.exp(-s / c) if s / c < 50 else 0.0
+                p_in = a * (1.0 - math.exp(-lam * T))
+                occ += s * p_in
+            return occ
+
+        lo, hi = 1.0, 1e12
+        if occupied(hi) < self.capacity:
+            T = hi  # cache effectively unbounded for this sample
+        else:
+            for _ in range(40):
+                mid = math.sqrt(lo * hi)
+                if occupied(mid) < self.capacity:
+                    lo = mid
+                else:
+                    hi = mid
+            T = math.sqrt(lo * hi)
+        hit = 0.0
+        for cnt, s in zip(counts, sizes):
+            lam = cnt / total
+            a = math.exp(-s / c) if s / c < 50 else 0.0
+            hit += cnt * a * (1.0 - math.exp(-lam * T))
+        return hit / total
+
+    def _reconfigure(self) -> None:
+        if len(self._win_count) < 32:
+            return
+        items = list(self._win_count.items())
+        if len(items) > 4000:  # bound tuner cost
+            items = self.rng.sample(items, 4000)
+        counts = [c for _, c in items]
+        sizes = [self._win_size[k] for k, _ in items]
+        total = self._win_n
+        best_c, best_ohr = self.c, -1.0
+        mean_size = sum(sizes) / len(sizes)
+        for mult in (0.0625, 0.125, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0):
+            cand = max(1.0, mean_size * mult * 64)
+            ohr = self._model_ohr(cand, counts, sizes, total)
+            if ohr > best_ohr:
+                best_ohr, best_c = ohr, cand
+        self.c = best_c
+        self._win_count.clear()
+        self._win_size.clear()
+        self._win_n = 0
+
+    # -- hot path -----------------------------------------------------------
+    def access(self, key: int, size: int) -> bool:
+        st = self.stats
+        st.accesses += 1
+        st.bytes_requested += size
+        # window stats for tuner
+        if len(self._win_count) < self.sample_limit or key in self._win_count:
+            self._win_count[key] = self._win_count.get(key, 0) + 1
+            self._win_size[key] = size
+        self._win_n += 1
+        if self._win_n >= self.reconf_every:
+            self._reconfigure()
+
+        if key in self.entries:
+            self.entries.move_to_end(key)
+            st.hits += 1
+            st.bytes_hit += size
+            return True
+        if size > self.capacity:
+            st.rejections += 1
+            return False
+        # THE AdaptSize admission rule — inversely proportional to size,
+        # applied even when the cache has free space (the pathology the
+        # paper's §5.2 calls out lives exactly here).
+        x = size / self.c
+        p_admit = math.exp(-x) if x < 50 else 0.0
+        if self.rng.random() >= p_admit:
+            st.rejections += 1
+            return False
+        while self.used + size > self.capacity:
+            _, vs = self.entries.popitem(last=False)
+            self.used -= vs
+            st.evictions += 1
+            st.victims_examined += 1
+        self.entries[key] = size
+        self.used += size
+        st.admissions += 1
+        return False
+
+
+class LHDCache:
+    """LHD: sample 64, evict lowest hit-density = E[hits] / (size · E[lifetime]).
+
+    Ages are tracked in coarse (power-of-two) bins per size class; hit and
+    eviction age histograms are refreshed every ``reconf_every`` accesses into
+    a per-(class, age-bin) hit-density table. No metadata is kept for
+    non-resident objects (the paper notes this is why LHD lags at small cache
+    sizes — our reproduction target).
+    """
+
+    SAMPLE = 64
+    AGE_BINS = 28
+    SIZE_CLASSES = 16
+
+    def __init__(self, capacity: int, *, reconf_every: int = 200_000, seed: int = 0x5EED, **_kw):
+        self.capacity = int(capacity)
+        self.reconf_every = reconf_every
+        self.rng = random.Random(seed)
+        self.stats = CacheStats()
+        self.sizes: dict[int, int] = {}
+        self.last_access: dict[int, int] = {}
+        self.keys: list[int] = []
+        self.pos: dict[int, int] = {}
+        self.used = 0
+        self.now = 0
+        # histograms[cls][age_bin]
+        z = lambda: [[0.0] * self.AGE_BINS for _ in range(self.SIZE_CLASSES)]
+        self.hit_hist = z()
+        self.evict_hist = z()
+        self.density = z()
+        for c in range(self.SIZE_CLASSES):  # optimistic prior: young = dense
+            for b in range(self.AGE_BINS):
+                self.density[c][b] = 1.0 / (1 << b)
+
+    def __contains__(self, key: int) -> bool:
+        return key in self.sizes
+
+    def used_bytes(self) -> int:
+        return self.used
+
+    @staticmethod
+    def _age_bin(age: int) -> int:
+        return min(age.bit_length(), LHDCache.AGE_BINS - 1)
+
+    @staticmethod
+    def _size_class(size: int) -> int:
+        return min(max(size.bit_length() - 6, 0), LHDCache.SIZE_CLASSES - 1)
+
+    def _reconfigure(self) -> None:
+        for c in range(self.SIZE_CLASSES):
+            hh, eh = self.hit_hist[c], self.evict_hist[c]
+            hits_up = 0.0
+            events_up = 0.0
+            lifetime_up = 0.0
+            # scan from oldest age down: density(age) = future hits /
+            # (future events weighted by remaining lifetime)
+            for b in range(self.AGE_BINS - 1, -1, -1):
+                ev = hh[b] + eh[b]
+                hits_up += hh[b]
+                events_up += ev
+                lifetime_up += events_up * (1 << b) * 0.5
+                if events_up > 0 and lifetime_up > 0:
+                    self.density[c][b] = hits_up / lifetime_up
+                # decay histograms so the table adapts (EWMA)
+                hh[b] *= 0.9
+                eh[b] *= 0.9
+
+    def _hit_density(self, key: int) -> float:
+        size = self.sizes[key]
+        age = self.now - self.last_access[key]
+        return self.density[self._size_class(size)][self._age_bin(age)] / size
+
+    def _remove(self, key: int) -> None:
+        self.used -= self.sizes.pop(key)
+        self.last_access.pop(key)
+        i = self.pos.pop(key)
+        last = self.keys.pop()
+        if last != key:
+            self.keys[i] = last
+            self.pos[last] = i
+
+    def access(self, key: int, size: int) -> bool:
+        st = self.stats
+        st.accesses += 1
+        st.bytes_requested += size
+        self.now += 1
+        if self.now % self.reconf_every == 0:
+            self._reconfigure()
+        if key in self.sizes:
+            age = self.now - self.last_access[key]
+            self.hit_hist[self._size_class(size)][self._age_bin(age)] += 1
+            self.last_access[key] = self.now
+            st.hits += 1
+            st.bytes_hit += size
+            return True
+        if size > self.capacity:
+            st.rejections += 1
+            return False
+        while self.used + size > self.capacity:
+            n = min(self.SAMPLE, len(self.keys))
+            pool = [self.rng.choice(self.keys) for _ in range(n)]
+            victim = min(pool, key=self._hit_density)
+            st.victims_examined += n
+            vage = self.now - self.last_access[victim]
+            vsize = self.sizes[victim]
+            self.evict_hist[self._size_class(vsize)][self._age_bin(vage)] += 1
+            self._remove(victim)
+            st.evictions += 1
+        self.sizes[key] = size
+        self.last_access[key] = self.now
+        self.pos[key] = len(self.keys)
+        self.keys.append(key)
+        self.used += size
+        st.admissions += 1
+        return False

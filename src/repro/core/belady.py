@@ -1,0 +1,121 @@
+"""Offline Belady-style bounds (paper Section 2: Belady / relaxed Belady).
+
+Exact OPT for variable object sizes is NP-hard [Berger et al. '18], so we
+provide the standard practical bounds:
+
+* :class:`BeladySizeCache` — the online-executable offline heuristic: on a
+  miss, admit, then evict resident objects in order of *farthest next access*
+  (ties to larger objects) until the cache fits. With unit sizes this is
+  exactly Belady's MIN. Used as the "OPT" reference line in benchmarks.
+* :func:`belady_boundary` — the relaxed-Belady boundary of LRB: the
+  ``cache_size``-quantile of next-access distances, used by LRB-lite labeling.
+
+Both require the full trace up front (``next_access_index`` preprocessing).
+"""
+
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+from .cache_api import AccessTrace, CacheStats
+
+__all__ = ["next_access_index", "BeladySizeCache", "belady_boundary"]
+
+_INF = 1 << 62
+
+
+def next_access_index(keys: np.ndarray) -> np.ndarray:
+    """next_use[i] = index of the next access to keys[i], or _INF if none."""
+    n = len(keys)
+    nxt = np.full(n, _INF, dtype=np.int64)
+    last_seen: dict[int, int] = {}
+    for i in range(n - 1, -1, -1):
+        k = int(keys[i])
+        nxt[i] = last_seen.get(k, _INF)
+        last_seen[k] = i
+    return nxt
+
+
+def belady_boundary(trace: AccessTrace, capacity: int) -> int:
+    """LRB's relaxed-Belady boundary: distance such that objects re-accessed
+    within it would fit in an OPT-managed cache (approximated as the
+    byte-weighted quantile of reuse distances at the given capacity)."""
+    nxt = next_access_index(trace.keys)
+    dists = (nxt - np.arange(len(nxt)))[nxt < _INF]
+    if len(dists) == 0:
+        return 1 << 20
+    mean_size = max(1.0, trace.mean_object_size)
+    entries = max(1, int(capacity / mean_size))
+    frac = min(1.0, entries / max(1, trace.num_objects))
+    return int(np.quantile(dists, frac)) if frac < 1.0 else int(dists.max())
+
+
+class BeladySizeCache:
+    """Farthest-next-access eviction with full future knowledge.
+
+    Must be driven via :func:`repro.core.cache_api.simulate` over the *same*
+    trace that was passed to the constructor (an internal cursor tracks the
+    position; a mismatch raises).
+    """
+
+    def __init__(self, capacity: int, trace: AccessTrace, **_kw):
+        self.capacity = int(capacity)
+        self.stats = CacheStats()
+        self._keys = trace.keys
+        self._nxt = next_access_index(trace.keys)
+        self._i = 0
+        self.sizes: dict[int, int] = {}
+        self.used = 0
+        self.heap: list[tuple[int, int]] = []  # (-next_use, key), lazy
+        self.next_use: dict[int, int] = {}
+
+    def __contains__(self, key: int) -> bool:
+        return key in self.sizes
+
+    def used_bytes(self) -> int:
+        return self.used
+
+    def access(self, key: int, size: int) -> bool:
+        st = self.stats
+        i = self._i
+        if i >= len(self._keys) or int(self._keys[i]) != key:
+            raise ValueError("BeladySizeCache must replay its constructor trace")
+        self._i += 1
+        nxt = int(self._nxt[i])
+        st.accesses += 1
+        st.bytes_requested += size
+        if key in self.sizes:
+            self.next_use[key] = nxt
+            heapq.heappush(self.heap, (-nxt, key))
+            st.hits += 1
+            st.bytes_hit += size
+            return True
+        if size > self.capacity:
+            st.rejections += 1
+            return False
+        if nxt == _INF:  # never used again: pointless to cache
+            st.rejections += 1
+            return False
+        while self.used + size > self.capacity:
+            while True:
+                negn, vk = heapq.heappop(self.heap)
+                if self.next_use.get(vk) == -negn and vk in self.sizes:
+                    break
+            # Belady guard: never evict something re-used sooner than the
+            # candidate — reject the candidate instead.
+            if -negn < nxt:
+                heapq.heappush(self.heap, (negn, vk))
+                st.rejections += 1
+                return False
+            self.used -= self.sizes.pop(vk)
+            self.next_use.pop(vk, None)
+            st.evictions += 1
+            st.victims_examined += 1
+        self.sizes[key] = size
+        self.next_use[key] = nxt
+        heapq.heappush(self.heap, (-nxt, key))
+        self.used += size
+        st.admissions += 1
+        return False

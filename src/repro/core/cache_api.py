@@ -1,0 +1,156 @@
+"""Cache policy API and trace-driven simulation loop.
+
+This module is the evaluation instrument of the paper (Section 5): every
+policy implements :class:`CachePolicy` and is driven by :func:`simulate`
+over a trace of ``(key, size)`` accesses, producing hit-ratio,
+byte-hit-ratio and CPU-overhead statistics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, Protocol, Sequence
+
+import numpy as np
+
+__all__ = [
+    "AccessTrace",
+    "CacheStats",
+    "CachePolicy",
+    "simulate",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class AccessTrace:
+    """A sequence of object accesses: parallel arrays of keys and byte sizes."""
+
+    name: str
+    keys: np.ndarray  # int64 object ids
+    sizes: np.ndarray  # int64 object sizes in bytes
+
+    def __post_init__(self):
+        if self.keys.shape != self.sizes.shape:
+            raise ValueError("keys and sizes must be parallel arrays")
+
+    def __len__(self) -> int:
+        return int(self.keys.shape[0])
+
+    @property
+    def num_objects(self) -> int:
+        return int(np.unique(self.keys).size)
+
+    @property
+    def total_object_bytes(self) -> int:
+        """Total size of unique objects (paper Table 1, 'Total Objects Size')."""
+        _, first_idx = np.unique(self.keys, return_index=True)
+        return int(self.sizes[first_idx].sum())
+
+    @property
+    def mean_object_size(self) -> float:
+        _, first_idx = np.unique(self.keys, return_index=True)
+        return float(self.sizes[first_idx].mean())
+
+    def slice(self, n: int) -> "AccessTrace":
+        return AccessTrace(self.name, self.keys[:n], self.sizes[:n])
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Hit/byte-hit accounting (paper Section 1: hit-ratio vs byte-hit-ratio)."""
+
+    accesses: int = 0
+    hits: int = 0
+    bytes_requested: int = 0
+    bytes_hit: int = 0
+    # Victim bookkeeping for the early-pruning study (paper Fig. 7).
+    victims_examined: int = 0
+    admissions: int = 0
+    rejections: int = 0
+    evictions: int = 0
+    wall_seconds: float = 0.0
+
+    @property
+    def misses(self) -> int:
+        return self.accesses - self.hits
+
+    @property
+    def hit_ratio(self) -> float:
+        return self.hits / self.accesses if self.accesses else 0.0
+
+    @property
+    def byte_hit_ratio(self) -> float:
+        return self.bytes_hit / self.bytes_requested if self.bytes_requested else 0.0
+
+    @property
+    def victims_per_access(self) -> float:
+        return self.victims_examined / self.accesses if self.accesses else 0.0
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["hit_ratio"] = self.hit_ratio
+        d["byte_hit_ratio"] = self.byte_hit_ratio
+        d["victims_per_access"] = self.victims_per_access
+        return d
+
+
+class CachePolicy(Protocol):
+    """A size-aware cache management policy.
+
+    ``access`` is the single hot-path entry point: record an access to
+    ``key`` of ``size`` bytes and return True on a cache hit.
+    """
+
+    capacity: int
+    stats: CacheStats
+
+    def access(self, key: int, size: int) -> bool:  # pragma: no cover - protocol
+        ...
+
+    def used_bytes(self) -> int:  # pragma: no cover - protocol
+        ...
+
+    def __contains__(self, key: int) -> bool:  # pragma: no cover - protocol
+        ...
+
+
+def simulate(
+    policy: "CachePolicy",
+    trace: AccessTrace | Iterable[tuple[int, int]],
+    *,
+    limit: int | None = None,
+    check_invariants: bool = False,
+) -> CacheStats:
+    """Drive ``policy`` over ``trace``; returns the policy's stats object.
+
+    ``check_invariants`` additionally asserts after every access that the
+    policy never exceeds its capacity (used by property tests).
+    """
+    if isinstance(trace, AccessTrace):
+        keys = trace.keys.tolist()
+        sizes = trace.sizes.tolist()
+        pairs: Sequence[tuple[int, int]] = list(zip(keys, sizes))
+    else:
+        pairs = list(trace)
+    if limit is not None:
+        pairs = pairs[:limit]
+
+    stats = policy.stats
+    access = policy.access
+    t0 = time.perf_counter()
+    if check_invariants:
+        cap = policy.capacity
+        for key, size in pairs:
+            access(key, size)
+            used = policy.used_bytes()
+            if used > cap:
+                raise AssertionError(
+                    f"capacity invariant violated: used={used} > cap={cap} "
+                    f"after access ({key}, {size})"
+                )
+    else:
+        for key, size in pairs:
+            access(key, size)
+    stats.wall_seconds += time.perf_counter() - t0
+    return stats

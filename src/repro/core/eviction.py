@@ -1,0 +1,260 @@
+"""Main-cache eviction policies for size-aware W-TinyLFU (paper Section 5).
+
+The paper evaluates six Main-cache eviction disciplines underneath the three
+admission schemes: SLRU (Caffeine's choice), four sampled policies mimicking
+Ristretto's SampledLFU (sample five, pick by: lowest frequency / largest size /
+lowest frequency-per-byte / closest-to-needed-size), and Random.
+
+The admission schemes (IV/QV/AV) need to *peek* at successive would-be victims
+without evicting them (AV gathers a victim set first; QV walks one at a time),
+so the interface exposes :meth:`iter_victims` — a generator of distinct
+candidate victims in eviction order — alongside the mutating
+:meth:`evict`/:meth:`insert`/:meth:`on_access`/:meth:`promote` operations.
+"""
+
+from __future__ import annotations
+
+import random
+from collections import OrderedDict
+from typing import Callable, Iterator
+
+__all__ = [
+    "EvictionPolicy",
+    "LRUEviction",
+    "SLRUEviction",
+    "SampledEviction",
+    "RandomEviction",
+    "make_eviction",
+]
+
+
+class EvictionPolicy:
+    """Bookkeeping for cached entries; selects victims. Sizes in bytes."""
+
+    def __init__(self):
+        self.sizes: dict[int, int] = {}
+        self.used = 0
+
+    def __contains__(self, key: int) -> bool:
+        return key in self.sizes
+
+    def __len__(self) -> int:
+        return len(self.sizes)
+
+    # -- mutations -------------------------------------------------------
+    def insert(self, key: int, size: int) -> None:
+        raise NotImplementedError
+
+    def evict(self, key: int) -> None:
+        raise NotImplementedError
+
+    def on_access(self, key: int) -> None:
+        """Hit: promote per the policy's recency rules."""
+        raise NotImplementedError
+
+    def promote(self, key: int) -> None:
+        """Rejected-candidate bookkeeping: treat ``key`` as if accessed once
+        (paper Alg. 4 line 14) so the next candidate sees different victims.
+        Sampled/Random policies have no order to promote in (paper: "some
+        eviction policies may not require this step")."""
+        self.on_access(key)
+
+    # -- victim selection --------------------------------------------------
+    def iter_victims(self, needed: int = 0) -> Iterator[int]:
+        """Yield distinct victim candidates in eviction order, without evicting.
+
+        ``needed`` is the space the caller is trying to free — only the
+        Sampled-Needed-Size rule uses it.
+        """
+        raise NotImplementedError
+
+    def victim(self, needed: int = 0) -> int | None:
+        return next(self.iter_victims(needed), None)
+
+
+class LRUEviction(EvictionPolicy):
+    """Plain LRU: victims from the least-recently-used end."""
+
+    def __init__(self):
+        super().__init__()
+        self.order: OrderedDict[int, None] = OrderedDict()
+
+    def insert(self, key: int, size: int) -> None:
+        self.sizes[key] = size
+        self.used += size
+        self.order[key] = None
+
+    def evict(self, key: int) -> None:
+        self.used -= self.sizes.pop(key)
+        del self.order[key]
+
+    def on_access(self, key: int) -> None:
+        self.order.move_to_end(key)
+
+    def iter_victims(self, needed: int = 0) -> Iterator[int]:
+        return iter(list(self.order))
+
+
+class SLRUEviction(EvictionPolicy):
+    """Segmented LRU: probationary + protected segments (Caffeine's Main).
+
+    New entries land in the probationary segment. A hit in probation moves the
+    entry to protected; when protected exceeds its share (80% of the bytes the
+    policy currently holds' capacity), its LRU entries demote back to
+    probation MRU. Victims drain from probation LRU first, then protected LRU.
+    """
+
+    def __init__(self, capacity: int, protected_frac: float = 0.8):
+        super().__init__()
+        self.protected_cap = int(capacity * protected_frac)
+        self.probation: OrderedDict[int, None] = OrderedDict()
+        self.protected: OrderedDict[int, None] = OrderedDict()
+        self.protected_bytes = 0
+
+    def insert(self, key: int, size: int) -> None:
+        self.sizes[key] = size
+        self.used += size
+        self.probation[key] = None
+
+    def evict(self, key: int) -> None:
+        size = self.sizes.pop(key)
+        self.used -= size
+        if key in self.probation:
+            del self.probation[key]
+        else:
+            del self.protected[key]
+            self.protected_bytes -= size
+
+    def _demote_overflow(self) -> None:
+        while self.protected_bytes > self.protected_cap and len(self.protected) > 1:
+            old, _ = self.protected.popitem(last=False)
+            self.protected_bytes -= self.sizes[old]
+            self.probation[old] = None
+
+    def on_access(self, key: int) -> None:
+        if key in self.protected:
+            self.protected.move_to_end(key)
+            return
+        del self.probation[key]
+        self.protected[key] = None
+        self.protected_bytes += self.sizes[key]
+        self._demote_overflow()
+
+    def promote(self, key: int) -> None:
+        # Rejected-candidate promotion only refreshes recency within the
+        # entry's current segment; it must not force probation→protected
+        # upgrades (those are reserved for real hits).
+        if key in self.protected:
+            self.protected.move_to_end(key)
+        else:
+            self.probation.move_to_end(key)
+
+    def iter_victims(self, needed: int = 0) -> Iterator[int]:
+        yield from list(self.probation)
+        yield from list(self.protected)
+
+
+class SampledEviction(EvictionPolicy):
+    """Ristretto-style sampling: sample 5 entries, pick per ``rule``.
+
+    Rules (paper Section 5): ``frequency`` (lowest sketch frequency),
+    ``size`` (largest size), ``frequency_size`` (lowest frequency/size),
+    ``needed_size`` (size closest to the space needed).
+    Maintains a swap-remove list for O(1) uniform sampling.
+    """
+
+    SAMPLE = 5
+
+    def __init__(self, rule: str, freq_fn: Callable[[int], int], seed: int = 0x5EED):
+        super().__init__()
+        if rule not in ("frequency", "size", "frequency_size", "needed_size"):
+            raise ValueError(f"unknown sampling rule: {rule}")
+        self.rule = rule
+        self.freq_fn = freq_fn
+        self.keys: list[int] = []
+        self.pos: dict[int, int] = {}
+        self.rng = random.Random(seed)
+
+    def insert(self, key: int, size: int) -> None:
+        self.sizes[key] = size
+        self.used += size
+        self.pos[key] = len(self.keys)
+        self.keys.append(key)
+
+    def evict(self, key: int) -> None:
+        self.used -= self.sizes.pop(key)
+        i = self.pos.pop(key)
+        last = self.keys.pop()
+        if last != key:
+            self.keys[i] = last
+            self.pos[last] = i
+
+    def on_access(self, key: int) -> None:  # sampling policies keep no order
+        pass
+
+    def promote(self, key: int) -> None:
+        pass
+
+    def _score(self, key: int, needed: int) -> float:
+        size = self.sizes[key]
+        if self.rule == "frequency":
+            return self.freq_fn(key)
+        if self.rule == "size":
+            return -size  # largest size evicted first
+        if self.rule == "frequency_size":
+            return self.freq_fn(key) / size
+        # needed_size: minimize |size - needed| (best memory utilization)
+        return abs(size - needed)
+
+    def iter_victims(self, needed: int = 0) -> Iterator[int]:
+        taken: set[int] = set()
+        n = len(self.keys)
+        while len(taken) < n:
+            pool = [k for k in (self.rng.choice(self.keys) for _ in range(self.SAMPLE)) if k not in taken]
+            if not pool:
+                # sampled only already-taken keys; fall back to a linear scan
+                pool = [k for k in self.keys if k not in taken]
+                if not pool:
+                    return
+            best = min(pool, key=lambda k: self._score(k, needed))
+            taken.add(best)
+            yield best
+
+
+class RandomEviction(SampledEviction):
+    """Uniform random victims (paper's 'Random' baseline)."""
+
+    def __init__(self, seed: int = 0x5EED):
+        super().__init__("frequency", lambda _k: 0, seed)
+
+    def iter_victims(self, needed: int = 0) -> Iterator[int]:
+        taken: set[int] = set()
+        n = len(self.keys)
+        while len(taken) < n:
+            k = self.rng.choice(self.keys)
+            if k in taken:
+                k = next((x for x in self.keys if x not in taken), None)
+                if k is None:
+                    return
+            taken.add(k)
+            yield k
+
+
+def make_eviction(
+    name: str,
+    *,
+    capacity: int,
+    freq_fn: Callable[[int], int],
+    seed: int = 0x5EED,
+) -> EvictionPolicy:
+    """Factory covering the paper's six Main-cache eviction policies."""
+    name = name.lower()
+    if name == "lru":
+        return LRUEviction()
+    if name == "slru":
+        return SLRUEviction(capacity)
+    if name == "random":
+        return RandomEviction(seed)
+    if name in ("sampled_frequency", "sampled_size", "sampled_frequency_size", "sampled_needed_size"):
+        return SampledEviction(name.removeprefix("sampled_"), freq_fn, seed)
+    raise ValueError(f"unknown eviction policy: {name}")

@@ -1,0 +1,275 @@
+"""Size-aware W-TinyLFU (the paper's contribution, Section 4, Algorithms 1-4).
+
+Architecture (Fig. 1/3): a Window LRU cache (default 1% of total bytes) in
+front of a Main cache with a pluggable eviction policy; the TinyLFU frequency
+sketch arbitrates admission from Window into Main. Extending to variable-sized
+objects (Alg. 1):
+
+* an object larger than the whole cache is rejected outright;
+* an object larger than the Window bypasses it and is offered to Main directly;
+* inserting into the Window can push out *multiple* Window victims, each of
+  which becomes a Main-cache candidate.
+
+The three admission disciplines for a candidate vs. Main victims:
+
+* **IV** (Implicit Victims, Alg. 2 — Caffeine): compare against the *first*
+  victim only; on win, blindly evict as many victims as needed.
+* **QV** (Queue of Victims, Alg. 3 — Ristretto): walk victims, evicting every
+  victim the candidate beats (these evictions stick even if the candidate is
+  ultimately rejected); admit iff enough space was freed.
+* **AV** (Aggregated Victims, Alg. 4 — this paper): gather victims until their
+  total size suffices; admit iff ``freq(candidate) ≥ Σ freq(victims)``; with
+  *early pruning*, stop gathering as soon as the victim frequency sum already
+  exceeds the candidate's frequency (Fig. 7 shows ×4–×16 fewer victim
+  examinations).
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+from .cache_api import CacheStats
+from .eviction import EvictionPolicy, make_eviction
+from .sketch import FrequencySketch
+
+__all__ = ["SizeAwareWTinyLFU", "ADMISSIONS", "EVICTIONS"]
+
+ADMISSIONS = ("iv", "qv", "av")
+EVICTIONS = (
+    "slru",
+    "lru",
+    "sampled_frequency",
+    "sampled_size",
+    "sampled_frequency_size",
+    "sampled_needed_size",
+    "random",
+)
+
+
+class SizeAwareWTinyLFU:
+    """W-TinyLFU extended to variable object sizes.
+
+    Parameters
+    ----------
+    capacity: total cache bytes.
+    admission: ``"iv" | "qv" | "av"``.
+    eviction: Main-cache eviction policy name (see :data:`EVICTIONS`).
+    window_frac: Window share of ``capacity`` (paper uses 1%).
+    expected_entries: sketch sizing hint (≈ capacity / mean object size).
+    early_pruning: AV's early-pruning optimization (Alg. 4 lines 6-7).
+    """
+
+    def __init__(
+        self,
+        capacity: int,
+        *,
+        admission: str = "av",
+        eviction: str = "slru",
+        window_frac: float = 0.01,
+        expected_entries: int | None = None,
+        early_pruning: bool = True,
+        adaptive_window: bool = False,
+        seed: int = 0x5EED,
+        sketch_kwargs: dict | None = None,
+    ):
+        if admission not in ADMISSIONS:
+            raise ValueError(f"admission must be one of {ADMISSIONS}")
+        self.capacity = int(capacity)
+        self.window_cap = max(1, int(capacity * window_frac))
+        self.main_cap = self.capacity - self.window_cap
+        self.admission = admission
+        self.early_pruning = early_pruning
+        # Adaptive region sizing (the paper's ref [19] / Caffeine's climber):
+        # hill-climb the Window share on the hit-ratio gradient.
+        self.adaptive_window = adaptive_window
+        self._adapt_step = max(1, int(capacity * 0.0625))
+        self._adapt_every = max(1000, 2 * (expected_entries or max(64, capacity // 4096)))
+        self._adapt_prev_hits = 0
+        self._adapt_prev_ratio = -1.0
+        self._adapt_accesses = 0
+        self._adapt_dir = 1
+        if expected_entries is None:
+            expected_entries = max(64, self.capacity // 4096)
+        self.sketch = FrequencySketch(expected_entries, **(sketch_kwargs or {}))
+
+        # Window: plain LRU over (key -> size).
+        self.window: OrderedDict[int, int] = OrderedDict()
+        self.window_bytes = 0
+        # Main: pluggable eviction policy (owns its size map).
+        self.main: EvictionPolicy = make_eviction(
+            eviction, capacity=self.main_cap, freq_fn=self.sketch.estimate, seed=seed
+        )
+        self.stats = CacheStats()
+
+    # -- introspection -----------------------------------------------------
+    def __contains__(self, key: int) -> bool:
+        return key in self.window or key in self.main
+
+    def used_bytes(self) -> int:
+        return self.window_bytes + self.main.used
+
+    # -- hot path ------------------------------------------------------------
+    def access(self, key: int, size: int) -> bool:
+        st = self.stats
+        st.accesses += 1
+        st.bytes_requested += size
+        self.sketch.increment(key)  # every occurrence, cached or not (§3)
+        if key in self.window:
+            self.window.move_to_end(key)
+            st.hits += 1
+            st.bytes_hit += size
+            return True
+        if key in self.main:
+            self.main.on_access(key)
+            st.hits += 1
+            st.bytes_hit += size
+            return True
+        self._on_miss(key, size)
+        if self.adaptive_window:
+            self._maybe_adapt()
+        return False
+
+    # -- adaptive window (paper ref [19]; Caffeine's climber) ---------------
+    def _maybe_adapt(self) -> None:
+        self._adapt_accesses += 1
+        if self._adapt_accesses < self._adapt_every:
+            return
+        ratio = (self.stats.hits - self._adapt_prev_hits) / self._adapt_accesses
+        if self._adapt_prev_ratio >= 0 and ratio < self._adapt_prev_ratio:
+            self._adapt_dir = -self._adapt_dir  # got worse: reverse
+        new_window = self.window_cap + self._adapt_dir * self._adapt_step
+        new_window = max(self.capacity // 100, min(self.capacity // 2, new_window))
+        self.window_cap = new_window
+        self.main_cap = self.capacity - new_window
+        # drain whichever region now overflows
+        while self.window_bytes > self.window_cap and self.window:
+            vk, vs = self.window.popitem(last=False)
+            self.window_bytes -= vs
+            self._evict_or_admit(vk, vs)
+        it = self.main.iter_victims(0)
+        while self.main.used > self.main_cap and len(self.main):
+            v = next(it, None)
+            if v is None:
+                break
+            self.main.evict(v)
+            self.stats.evictions += 1
+        self._adapt_prev_ratio = ratio
+        self._adapt_prev_hits = self.stats.hits
+        self._adapt_accesses = 0
+
+    # -- Algorithm 1: miss handling ---------------------------------------
+    def _on_miss(self, key: int, size: int) -> None:
+        if size > self.capacity:  # line 2: can never fit
+            self.stats.rejections += 1
+            return
+        candidates: list[tuple[int, int]] = []
+        if size > self.window_cap:
+            # line 6: too large for the Window -> direct Main candidate
+            candidates.append((key, size))
+        else:
+            self.window[key] = size
+            self.window_bytes += size
+            while self.window_bytes > self.window_cap:  # lines 9-11
+                vk, vs = self.window.popitem(last=False)
+                self.window_bytes -= vs
+                candidates.append((vk, vs))
+        for ck, cs in candidates:  # line 13
+            self._evict_or_admit(ck, cs)
+
+    # -- admission dispatch -------------------------------------------------
+    def _evict_or_admit(self, key: int, size: int) -> None:
+        if size > self.main_cap:
+            self.stats.rejections += 1
+            return
+        free = self.main_cap - self.main.used
+        if free >= size:
+            # No victims needed: admit unconditionally (§5.2: "AV always
+            # admits an item if there is enough free space without evictions").
+            self.main.insert(key, size)
+            self.stats.admissions += 1
+            return
+        needed = size - free
+        if self.admission == "iv":
+            self._admit_iv(key, size, needed)
+        elif self.admission == "qv":
+            self._admit_qv(key, size, needed)
+        else:
+            self._admit_av(key, size, needed)
+
+    # -- Algorithm 2: Implicit Victims (Caffeine) ---------------------------
+    def _admit_iv(self, key: int, size: int, needed: int) -> None:
+        st = self.stats
+        estimate = self.sketch.estimate
+        first = self.main.victim(needed)
+        st.victims_examined += 1
+        if estimate(key) >= estimate(first):
+            freed = 0
+            it = self.main.iter_victims(needed)
+            while freed < needed:
+                v = next(it)
+                freed += self.main.sizes[v]
+                self.main.evict(v)
+                st.evictions += 1
+            self.main.insert(key, size)
+            st.admissions += 1
+        else:
+            self.main.promote(first)
+            st.rejections += 1
+
+    # -- Algorithm 3: Queue of Victims (Ristretto) ---------------------------
+    def _admit_qv(self, key: int, size: int, needed: int) -> None:
+        st = self.stats
+        estimate = self.sketch.estimate
+        cand_f = estimate(key)
+        freed = 0
+        it = self.main.iter_victims(needed)
+        while freed < needed:
+            v = next(it, None)
+            if v is None:
+                break
+            st.victims_examined += 1
+            if cand_f >= estimate(v):
+                freed += self.main.sizes[v]
+                self.main.evict(v)  # sticks even if candidate is rejected
+                st.evictions += 1
+            else:
+                self.main.promote(v)
+                break
+        if freed >= needed:
+            self.main.insert(key, size)
+            st.admissions += 1
+        else:
+            st.rejections += 1
+
+    # -- Algorithm 4: Aggregated Victims (this paper) ------------------------
+    def _admit_av(self, key: int, size: int, needed: int) -> None:
+        st = self.stats
+        estimate = self.sketch.estimate
+        cand_f = estimate(key)
+        victims: list[int] = []
+        vbytes = 0
+        vfreq = 0
+        it = self.main.iter_victims(needed)
+        pruned = False
+        while vbytes < needed:
+            v = next(it, None)
+            if v is None:  # cannot free enough (shouldn't happen: size<=main_cap)
+                pruned = True
+                break
+            victims.append(v)
+            vbytes += self.main.sizes[v]
+            vfreq += estimate(v)
+            st.victims_examined += 1
+            if self.early_pruning and cand_f < vfreq:  # lines 6-7
+                pruned = True
+                break
+        if not pruned and cand_f >= vfreq:
+            for v in victims:  # lines 9-11
+                self.main.evict(v)
+                st.evictions += 1
+            self.main.insert(key, size)
+            st.admissions += 1
+        else:
+            for v in victims:  # lines 13-14
+                self.main.promote(v)
+            st.rejections += 1

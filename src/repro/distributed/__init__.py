@@ -1,0 +1,6 @@
+"""Distribution substrate: sharding rules, activation constraints, and
+gradient compression."""
+
+from .sharding import ShardingPolicy, param_specs, shardings_from_specs, use_mesh
+
+__all__ = ["ShardingPolicy", "param_specs", "shardings_from_specs", "use_mesh"]

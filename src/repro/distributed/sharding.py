@@ -1,0 +1,267 @@
+"""Sharding rules: logical parameter/activation/cache axes -> mesh axes.
+
+Parallelism map (DESIGN.md §6):
+* ``model`` — tensor parallel: attention heads, FFN hidden, vocab, experts.
+* ``data``  (+ ``pod`` when present) — FSDP/ZeRO: parameters, optimizer
+  state and gradients sharded on a "fsdp" dim; batch sharded for compute.
+* EP: MoE expert banks shard the expert dim over ``model`` and the
+  per-expert matrices over FSDP.
+* SP: residual activations between blocks shard the sequence dim over
+  ``model`` (enabled by the perf pass; see ``ShardingPolicy.seq_shard``).
+
+Every rule passes through a divisibility guard: a mesh axis is dropped from
+a dim that it does not divide (e.g. smollm's 9 heads on a 16-way model axis
+degrade to replicated attention, exactly as DESIGN.md documents).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import re
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+FSDP_SINGLE = ("data",)
+FSDP_MULTI = ("pod", "data")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Tunable knobs recorded per §Perf iteration.
+
+    Defaults are the production config: Megatron-SP residual sharding is
+    required for train cells to fit 16GiB HBM (saved remat carries are
+    O(L·B·S·d) otherwise), and decode KV caches fall back to sequence
+    sharding (flash-decoding layout) whenever kv-heads don't divide the
+    model axis — see EXPERIMENTS.md §Dry-run."""
+
+    fsdp: bool = True  # shard params over data(+pod)
+    seq_shard: bool = True  # Megatron-SP style activation sequence sharding
+    kv_seq_shard: bool = True  # decode caches: shard seq when heads can't
+    shard_mla_latent: bool = False  # shard MLA latent *feature* dim (perf knob)
+    kv_cache_dtype: str | None = None  # e.g. "int8" perf iteration
+
+
+def _axes(mesh: Mesh) -> tuple[tuple[str, ...], str]:
+    """Returns (fsdp_axes, tp_axis) for the mesh."""
+    names = mesh.axis_names
+    fsdp = tuple(a for a in ("pod", "data") if a in names)
+    return fsdp, ("model" if "model" in names else names[-1])
+
+
+_MESH = threading.local()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, policy: ShardingPolicy | None = None):
+    _MESH.mesh = mesh
+    _MESH.policy = policy or ShardingPolicy()
+    try:
+        yield
+    finally:
+        _MESH.mesh = None
+        _MESH.policy = None
+
+
+def current_policy() -> ShardingPolicy:
+    return getattr(_MESH, "policy", None) or ShardingPolicy()
+
+
+def maybe_constrain(x, kind: str = "residual"):
+    """Pin activation shardings inside model code. No-op outside a
+    ``use_mesh`` context (smoke tests, single-device runs)."""
+    mesh = getattr(_MESH, "mesh", None)
+    if mesh is None:
+        return x
+    policy = current_policy()
+    fsdp, tp = _axes(mesh)
+    b = fsdp if len(fsdp) > 1 else (fsdp[0] if fsdp else None)
+    tp_size = mesh.shape[tp]
+    if kind == "residual":  # [B,S,d]
+        seq = tp if policy.seq_shard else None
+        spec = guard(x.shape, P(b, seq, None), mesh)
+    elif kind == "heads":  # [B,S,n,h]
+        spec = guard(x.shape, P(b, None, tp, None), mesh)
+    elif kind == "kv":  # [B,S,n,h] collected KV: heads if divisible, else seq
+        if x.shape[2] % tp_size == 0:
+            spec = guard(x.shape, P(b, None, tp, None), mesh)
+        else:
+            spec = guard(x.shape, P(b, tp, None, None), mesh)
+    elif kind == "latent":  # [B,S,r] MLA latent: shard seq
+        spec = guard(x.shape, P(b, tp, None), mesh)
+    elif kind == "moe_buf":  # [G,E,C,d] expert buffers: EP over model
+        spec = guard(x.shape, P(b, tp, None, None), mesh)
+    elif kind == "moe_buf5":  # [B,ns,E,C,d] expert buffers: EP over model
+        spec = guard(x.shape, P(b, None, tp, None, None), mesh)
+    else:
+        spec = guard(x.shape, P(b), mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def guard(shape, spec: P, mesh: Mesh) -> P:
+    """Drop mesh axes that don't divide their dim; drop specs past ndim."""
+    out = []
+    for d, entry in enumerate(spec):
+        if d >= len(shape):
+            break
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(entry if shape[d] % size == 0 else None)
+    while len(out) < len(shape):
+        out.append(None)
+    return P(*out)
+
+
+# -- parameter rules ----------------------------------------------------------
+# (path regex, spec builder). Leading [R] segment-stack dim handled by caller.
+def _param_rules(fsdp, tp):
+    F = fsdp if fsdp else None
+    return [
+        (r"embed/table$", P(tp, F)),
+        (r"embed/lm_head$", P(F, tp)),
+        (r"(^|/)(wq|wk|wv)$", P(F, tp, None)),
+        (r"/wo$", P(tp, None, F)),
+        (r"/(bq|bk|bv)$", P(tp, None)),
+        (r"/w_dkv$", P(F, None)),
+        (r"/w_kr$", P(F, None)),
+        (r"/(w_uk|w_uv)$", P(F, tp, None)),
+        # expert banks BEFORE the generic FFN rules (ordered first-match)
+        (r"experts/(w_in|w_gate)$", P(tp, F, None)),  # [E, d, ff] -> EP
+        (r"experts/w_out$", P(tp, None, F)),  # [E, ff, d]
+        (r"shared/(w_in|w_gate)$", P(None, F, tp)),
+        (r"shared/w_out$", P(None, tp, F)),
+        (r"/router$", P(F, None)),
+        (r"/(w_in|w_gate)$", P(F, tp)),
+        (r"/w_out$", P(tp, F)),
+        # Griffin
+        (r"/(w_x)$", P(F, tp)),
+        (r"/conv_[wb]$", P(None, tp)),
+        (r"/(w_a|w_i)$", P(F, tp)),
+        (r"/(b_a|b_i|lam)$", P(tp)),
+        # RWKV
+        (r"/(w_r|w_k|w_v|w_g|cm_r)$", P(F, tp)),
+        (r"/w_o$", P(tp, F)),
+        (r"/cm_k$", P(F, tp)),
+        (r"/cm_v$", P(tp, F)),
+        (r"/decay_w1$", P(F, None)),
+        (r"/decay_w2$", P(None, tp)),
+        (r"/bonus_u$", P(tp, None)),
+        (r"/(ddlerp_w1|ddlerp_w2|mu|cm_mu|ln_x_scale|decay_base)", P()),
+        (r"norm", P()),
+        (r"/(scale|bias)$", P()),
+    ]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params_shape, mesh: Mesh, *, policy: ShardingPolicy | None = None,
+                fsdp_axes: tuple[str, ...] | None = None):
+    """PartitionSpec pytree for a parameter (or optimizer-moment) pytree.
+
+    Leaves under ``segments``/``enc_segments`` carry a leading stacked-layer
+    dim that is never sharded."""
+    policy = policy or ShardingPolicy()
+    if fsdp_axes is None:
+        fsdp_axes, tp = _axes(mesh)
+    else:
+        _, tp = _axes(mesh)
+    if not policy.fsdp:
+        fsdp_axes = ()
+    rules = _param_rules(fsdp_axes or None, tp)
+
+    def spec_for(path, leaf):
+        s = _path_str(path)
+        stacked = "segments" in s
+        for pat, spec in rules:
+            if re.search(pat, s):
+                full = P(None, *spec) if stacked else spec
+                return guard(leaf.shape, full, mesh)
+        return guard(leaf.shape, P(), mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def shardings_from_specs(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# -- batch / activation / cache rules ------------------------------------------
+def batch_spec(mesh: Mesh) -> P:
+    fsdp, _ = _axes(mesh)
+    return P(fsdp if len(fsdp) > 1 else (fsdp[0] if fsdp else None))
+
+
+def batch_specs_for(batch_shape, mesh: Mesh):
+    """Shard dim0 (global batch) over data(+pod); replicate others.
+    Falls back to replication when the batch doesn't divide (e.g. batch=1
+    long-context decode)."""
+    b = batch_spec(mesh)
+
+    def f(leaf):
+        return guard(leaf.shape, P(b[0] if len(b) else None), mesh) if leaf.ndim else P()
+
+    return jax.tree.map(f, batch_shape)
+
+
+def cache_specs(cache_shape, mesh: Mesh, *, policy: ShardingPolicy | None = None):
+    """Decode-cache shardings: [R,B,S,n,h] -> batch over data(+pod), kv heads
+    over model (when divisible); MLA latents optionally shard the latent dim."""
+    policy = policy or ShardingPolicy()
+    fsdp, tp = _axes(mesh)
+    b = fsdp if len(fsdp) > 1 else (fsdp[0] if fsdp else None)
+
+    tp_size = mesh.shape[tp]
+
+    def spec_for(path, leaf):
+        s = _path_str(path)
+        if re.search(r"/(k|v|xk|xv)$", s):  # [R,B,S,n,h]
+            if leaf.shape[3] % tp_size == 0:
+                return guard(leaf.shape, P(None, b, None, tp, None), mesh)
+            if policy.kv_seq_shard:  # flash-decoding layout: shard sequence
+                return guard(leaf.shape, P(None, b, tp, None, None), mesh)
+            return guard(leaf.shape, P(None, b, None, None, None), mesh)
+        if s.endswith("c_kv") or s.endswith("k_rope"):  # [R,B,S,r]
+            if policy.shard_mla_latent and s.endswith("c_kv"):
+                return guard(leaf.shape, P(None, b, None, tp), mesh)
+            if policy.kv_seq_shard:
+                return guard(leaf.shape, P(None, b, tp, None), mesh)
+            return guard(leaf.shape, P(None, b, None, None), mesh)
+        if s.endswith("/S"):  # rwkv state [R,B,H,hk,hv]
+            return guard(leaf.shape, P(None, b, tp, None, None), mesh)
+        if s.endswith("tm_prev") or s.endswith("cm_prev"):  # [R,B,d]
+            return guard(leaf.shape, P(None, b, tp), mesh)
+        if s.endswith("/h"):  # rglru [R,B,w]
+            return guard(leaf.shape, P(None, b, tp), mesh)
+        if s.endswith("/conv"):  # [R,B,cw-1,w]
+            return guard(leaf.shape, P(None, b, None, tp), mesh)
+        return guard(leaf.shape, P(None, b), mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)
+
+
+def logits_spec(mesh: Mesh) -> P:
+    fsdp, tp = _axes(mesh)
+    b = fsdp if len(fsdp) > 1 else (fsdp[0] if fsdp else None)
+    return P(b, tp)

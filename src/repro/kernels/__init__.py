@@ -1,0 +1,4 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU):
+cms/ — batched TinyLFU count-min sketch (the paper's data structure);
+attention/ — flash attention forward (+jnp VJP);
+wkv/ — RWKV6 chunked linear recurrence."""

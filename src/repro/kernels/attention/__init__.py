@@ -1,0 +1,23 @@
+"""Flash attention kernel package.
+
+``flash_attention`` dispatches to the Pallas TPU kernel (ops.py) on TPU
+backends and to the pure-jnp chunked reference (ref.py) elsewhere; both are
+validated against ``attention_dense_ref`` in tests/test_kernels.py.
+"""
+
+from .ref import attention_dense_ref, flash_attention_ref
+
+
+def flash_attention(q, k, v, scale, causal=True, window=None, softcap=None):
+    import jax
+
+    if jax.default_backend() == "tpu":  # pragma: no cover - no TPU in CI
+        from .ops import flash_attention_tpu
+
+        return flash_attention_tpu(
+            q, k, v, scale, causal=causal, window=window, softcap=softcap
+        )
+    return flash_attention_ref(q, k, v, scale, causal, window, softcap)
+
+
+__all__ = ["flash_attention", "flash_attention_ref", "attention_dense_ref"]

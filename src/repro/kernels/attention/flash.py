@@ -1,0 +1,118 @@
+"""Pallas TPU flash-attention (forward) kernel.
+
+VMEM-tiled online-softmax attention with zero-copy GQA: the k/v BlockSpec
+index maps route query head ``h`` to kv head ``h // group`` — no kv-head
+replication in HBM. Supports causal + sliding-window masks and gemma2-style
+tanh soft-capping. Accumulator/max/sum live in VMEM scratch carried across
+the kv-chunk grid dimension (fastest), reset at chunk 0.
+
+Grid: (B, Hq, S/BQ, T/BK). Block shapes default to MXU-aligned (128, head
+dim as-is). Backward uses the jnp reference VJP (ref.py) — fusing the
+forward removes the dominant HBM term (the [S,T] score materialization);
+see EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.3819763e38
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window, softcap, bq: int, bk: int,
+                  t_real: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _reset():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [BQ, D]
+    k = k_ref[0, 0].astype(jnp.float32)  # [BK, D]
+    v = v_ref[0, 0].astype(jnp.float32)  # [BK, Dv]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [BQ, BK]
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < t_real
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    m_scr[...] = m_new
+    l_scr[...] = l_prev * corr + p.sum(-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_fwd_pallas(q, k, v, scale, *, causal=True, window=None,
+                               softcap=None, bq: int = DEFAULT_BQ,
+                               bk: int = DEFAULT_BK, interpret: bool = True):
+    """q: [B,Hq,S,D]; k,v: [B,Hkv,T,D*]; returns [B,Hq,S,Dv]."""
+    B, Hq, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    Dv = v.shape[3]
+    g = Hq // Hkv
+    bq_ = min(bq, S)
+    bk_ = min(bk, T)
+    pad_s = (-S) % bq_
+    pad_t = (-T) % bk_
+    if pad_s:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+    if pad_t:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_t), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_t), (0, 0)))
+    Sp, Tp = S + pad_s, T + pad_t
+    grid = (B, Hq, Sp // bq_, Tp // bk_)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal, window=window,
+            softcap=softcap, bq=bq_, bk=bk_, t_real=T,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq_, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            # zero-copy GQA: query head h reads kv head h // g
+            pl.BlockSpec((1, 1, bk_, D), lambda b, h, qi, ki: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk_, Dv), lambda b, h, qi, ki: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq_, Dv), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sp, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, 1), jnp.float32),
+            pltpu.VMEM((bq_, 1), jnp.float32),
+            pltpu.VMEM((bq_, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :S]

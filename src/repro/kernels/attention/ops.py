@@ -1,0 +1,40 @@
+"""Jitted wrapper for the TPU flash-attention kernel: layout adaptation
+([B,S,H,D] model layout <-> [B,H,S,D] kernel layout) and a custom VJP whose
+backward delegates to the jnp reference (ref.py recomputation backward)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flash import flash_attention_fwd_pallas
+from .ref import _bwd as _ref_bwd  # recomputation backward
+from .ref import _fwd_scan
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention_tpu(q, k, v, scale, causal=True, window=None, softcap=None):
+    """q [B,S,nq,hd]; k,v [B,T,nkv,hd*] (model layout)."""
+    out = flash_attention_fwd_pallas(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+        scale, causal=causal, window=window, softcap=softcap,
+        interpret=jax.default_backend() != "tpu",
+    )
+    return jnp.swapaxes(out, 1, 2)
+
+
+def _tpu_fwd(q, k, v, scale, causal, window, softcap):
+    out = flash_attention_tpu(q, k, v, scale, causal, window, softcap)
+    # lse recomputed by the reference backward's saved-residual convention:
+    _, lse = _fwd_scan(q, k, v, scale=scale, causal=causal, window=window,
+                       softcap=softcap, chunk=1024)
+    return out, (q, k, v, out, lse)
+
+
+def _tpu_bwd(scale, causal, window, softcap, res, dout):
+    return _ref_bwd(scale, causal, window, softcap, 1024, res, dout)
+
+
+flash_attention_tpu.defvjp(_tpu_fwd, _tpu_bwd)

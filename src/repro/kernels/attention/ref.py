@@ -1,0 +1,175 @@
+"""Flash attention, pure-jnp reference (the oracle for the Pallas kernel).
+
+Chunked online-softmax attention with a hand-written VJP: neither forward
+nor backward ever materializes the [S,T] score matrix (the backward
+recomputes per-chunk scores from q,k,v + the saved logsumexp — the standard
+flash-attention recomputation). Supports GQA (q heads grouped over kv
+heads), causal and sliding-window masks, and gemma2-style tanh score
+soft-capping.
+
+Shapes: q [B,S,nq,hd]; k,v [B,T,nkv,hd] with nq % nkv == 0.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+DEFAULT_CHUNK = 1024
+
+
+def _mask_chunk(qpos, kpos, causal: bool, window: int | None):
+    """[S,C] boolean mask for one kv chunk."""
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= kpos[None, :] > qpos[:, None] - window
+    return m
+
+
+def _fwd_scan(q, k, v, *, scale, causal, window, softcap, chunk):
+    """Returns (out [B,S,nq,hd], lse [B,S,nq])."""
+    B, S, nq, hd = q.shape
+    T, nkv = k.shape[1], k.shape[2]
+    hd_v = v.shape[3]
+    g = nq // nkv
+    C = min(chunk, T)
+    nc = (T + C - 1) // C
+    Tp = nc * C
+    if Tp != T:
+        k = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    qg = q.reshape(B, S, nkv, g, hd)
+    kc = jnp.moveaxis(k.reshape(B, nc, C, nkv, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nc, C, nkv, hd_v), 1, 0)
+    qpos = jnp.arange(S)
+
+    # NOTE: the chunk index travels in the CARRY (not as scan xs) so XLA
+    # cannot loop-invariant-hoist all per-chunk masks into one [nc,S,C]
+    # tensor (observed on the CPU backend; see EXPERIMENTS.md §Dry-run).
+    def step(carry, xs):
+        i, m, l, acc = carry
+        kci, vci = xs
+        start = i * C
+        s = jnp.einsum("bsngh,bcnh->bnsgc", qg, kci).astype(jnp.float32) * scale
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        kpos = start + jnp.arange(C)
+        msk = _mask_chunk(qpos, kpos, causal, window) & (kpos < T)[None]
+        s = jnp.where(msk[None, None, :, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum("bnsgc,bcnh->bnsgh", p, vci.astype(jnp.float32))
+        return (i + 1, m_new, l, acc), None
+
+    m0 = jnp.full((B, nkv, S, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, nkv, S, g), jnp.float32)
+    a0 = jnp.zeros((B, nkv, S, g, hd_v), jnp.float32)
+    (_, m, l, acc), _ = jax.lax.scan(
+        step, (jnp.int32(0), m0, l0, a0), (kc, vc)
+    )
+    l = jnp.maximum(l, 1e-30)
+    out = (acc / l[..., None]).swapaxes(1, 2).reshape(B, S, nq, hd_v)
+    lse = (m + jnp.log(l)).swapaxes(1, 2).reshape(B, S, nq)
+    return out.astype(q.dtype), lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_ref(q, k, v, scale, causal=True, window=None, softcap=None,
+                        chunk=DEFAULT_CHUNK):
+    out, _ = _fwd_scan(q, k, v, scale=scale, causal=causal, window=window,
+                       softcap=softcap, chunk=chunk)
+    return out
+
+
+def _fwd(q, k, v, scale, causal, window, softcap, chunk):
+    out, lse = _fwd_scan(q, k, v, scale=scale, causal=causal, window=window,
+                         softcap=softcap, chunk=chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd(scale, causal, window, softcap, chunk, res, dout):
+    q, k, v, out, lse = res
+    B, S, nq, hd = q.shape
+    T, nkv = k.shape[1], k.shape[2]
+    hd_v = v.shape[3]
+    g = nq // nkv
+    C = min(chunk, T)
+    nc = (T + C - 1) // C
+    Tp = nc * C
+    if Tp != T:
+        k = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    qg = q.reshape(B, S, nkv, g, hd)
+    do = dout.reshape(B, S, nkv, g, hd_v).astype(jnp.float32)
+    og = out.reshape(B, S, nkv, g, hd_v).astype(jnp.float32)
+    lseg = lse.reshape(B, S, nkv, g).swapaxes(1, 2)  # [B,nkv,S,g]
+    delta = (do * og).sum(-1).swapaxes(1, 2)  # [B,nkv,S,g] = rowsum(do*o)
+    kc = jnp.moveaxis(k.reshape(B, nc, C, nkv, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nc, C, nkv, hd_v), 1, 0)
+    qpos = jnp.arange(S)
+
+    def step(carry, xs):
+        i, dq = carry
+        kci, vci = xs
+        start = i * C
+        s_raw = jnp.einsum("bsngh,bcnh->bnsgc", qg, kci).astype(jnp.float32) * scale
+        if softcap is not None:
+            t = jnp.tanh(s_raw / softcap)
+            s = t * softcap
+        else:
+            s = s_raw
+        kpos = start + jnp.arange(C)
+        msk = _mask_chunk(qpos, kpos, causal, window) & (kpos < T)[None]
+        s = jnp.where(msk[None, None, :, None, :], s, NEG_INF)
+        p = jnp.exp(s - lseg[..., None])  # [B,nkv,S,g,C]
+        dv_c = jnp.einsum("bnsgc,bsngh->bcnh", p, do)
+        dp = jnp.einsum("bsngh,bcnh->bnsgc", do, vci.astype(jnp.float32))
+        ds = p * (dp - delta[..., None])
+        if softcap is not None:
+            ds = ds * (1.0 - t * t)  # d tanh
+        ds = jnp.where(msk[None, None, :, None, :], ds, 0.0)
+        dq = dq + jnp.einsum("bnsgc,bcnh->bsngh", ds, kci.astype(jnp.float32)) * scale
+        dk_c = jnp.einsum("bnsgc,bsngh->bcnh", ds, qg.astype(jnp.float32)) * scale
+        return (i + 1, dq), (dk_c, dv_c)
+
+    dq0 = jnp.zeros((B, S, nkv, g, hd), jnp.float32)
+    (_, dq), (dk_c, dv_c) = jax.lax.scan(step, (jnp.int32(0), dq0), (kc, vc))
+    dk = jnp.moveaxis(dk_c, 0, 1).reshape(B, Tp, nkv, hd)[:, :T]
+    dv = jnp.moveaxis(dv_c, 0, 1).reshape(B, Tp, nkv, hd_v)[:, :T]
+    return (
+        dq.reshape(B, S, nq, hd).astype(q.dtype),
+        dk.astype(k.dtype),
+        dv.astype(v.dtype),
+    )
+
+
+flash_attention_ref.defvjp(_fwd, _bwd)
+
+
+def attention_dense_ref(q, k, v, scale, causal=True, window=None, softcap=None):
+    """Naive O(S·T) oracle used by kernel sweep tests."""
+    B, S, nq, hd = q.shape
+    T, nkv = k.shape[1], k.shape[2]
+    hd_v = v.shape[3]
+    g = nq // nkv
+    qg = q.reshape(B, S, nkv, g, hd)
+    s = jnp.einsum("bsngh,btnh->bnsgt", qg, k).astype(jnp.float32) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos, kpos = jnp.arange(S), jnp.arange(T)
+    m = jnp.ones((S, T), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(m[None, None, :, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bnsgt,btnh->bnsgh", p, v.astype(p.dtype))
+    return o.swapaxes(1, 2).reshape(B, S, nq, hd_v).astype(q.dtype)

@@ -1,0 +1,71 @@
+"""Jitted public ops for the device-side TinyLFU sketch (and the aging
+reset), plus the JAX-native DeviceSketch convenience wrapper used by the
+serving data plane."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .cms import cms_estimate_pallas, cms_update_pallas
+from .ref import ROWS, cms_estimate_ref, cms_update_ref, row_indexes
+
+__all__ = ["make_table", "update", "estimate", "reset", "DeviceSketch"]
+
+
+def make_table(width: int) -> jax.Array:
+    assert width & (width - 1) == 0, "width must be a power of two"
+    return jnp.zeros((ROWS, width), jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "use_pallas"))
+def update(table, keys, *, cap: int = 15, use_pallas: bool = True):
+    idx = row_indexes(keys, table.shape[1])
+    if use_pallas:
+        return cms_update_pallas(table, idx, cap=cap,
+                                 interpret=jax.default_backend() != "tpu")
+    return cms_update_ref(table, keys, cap=cap)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def estimate(table, keys, *, use_pallas: bool = True):
+    if use_pallas:
+        idx = row_indexes(keys, table.shape[1])
+        vals = cms_estimate_pallas(table, idx,
+                                   interpret=jax.default_backend() != "tpu")
+        return vals.min(0)
+    return cms_estimate_ref(table, keys)
+
+
+@jax.jit
+def reset(table):
+    """TinyLFU aging: halve every counter (paper §3)."""
+    return table >> 1
+
+
+class DeviceSketch:
+    """Batched TinyLFU sketch living on device; used by the serving engine's
+    data plane for admission decisions over request batches."""
+
+    def __init__(self, expected_entries: int, *, sample_factor: int = 10, cap: int = 15):
+        width = 128
+        while width < expected_entries:
+            width <<= 1
+        self.table = make_table(width)
+        self.cap = cap
+        self.sample_size = sample_factor * expected_entries
+        self._ops = 0
+
+    def increment(self, keys) -> None:
+        keys = jnp.atleast_1d(jnp.asarray(keys, jnp.int32))
+        self.table = update(self.table, keys, cap=self.cap)
+        self._ops += int(keys.shape[0])
+        if self._ops >= self.sample_size:
+            self.table = reset(self.table)
+            self._ops //= 2
+
+    def estimate(self, keys):
+        keys = jnp.atleast_1d(jnp.asarray(keys, jnp.int32))
+        return estimate(self.table, keys)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracle for the device-side TinyLFU count-min sketch.
+
+Device semantics (vs. the host sketch in repro/core/sketch.py):
+* 4 rows, width a power of two (multiple of 128 for TPU lanes);
+* Kirsch-Mitzenmacher double hashing from two 32-bit murmur3 finalizers
+  (the host sketch uses 64-bit splitmix — device JAX runs without x64);
+* batched, non-conservative increment: all keys in a batch are applied at
+  once (duplicate keys in one batch sum), counters saturate at ``cap``;
+* estimate = min over rows (+nothing: the doorkeeper stays host-side).
+
+These are the semantics the Pallas kernel implements; tests/test_kernels.py
+sweeps shapes/dtypes asserting kernel == this oracle, and property tests
+assert the CMS guarantees (never underestimates, etc.).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+ROWS = 4
+
+
+def mix32(x):
+    """murmur3 fmix32 in uint32."""
+    x = x.astype(jnp.uint32)
+    x ^= x >> 16
+    x = x * jnp.uint32(0x85EBCA6B)
+    x ^= x >> 13
+    x = x * jnp.uint32(0xC2B2AE35)
+    x ^= x >> 16
+    return x
+
+
+def row_indexes(keys, width: int):
+    """keys [N] int32/uint32 -> [ROWS, N] int32 indexes."""
+    h1 = mix32(keys.astype(jnp.uint32))
+    h2 = mix32(keys.astype(jnp.uint32) ^ jnp.uint32(0x9E3779B9)) | jnp.uint32(1)
+    r = jnp.arange(ROWS, dtype=jnp.uint32)[:, None]
+    idx = (h1[None, :] + r * h2[None, :]) & jnp.uint32(width - 1)
+    return idx.astype(jnp.int32)
+
+
+def cms_update_ref(table, keys, cap: int = 15):
+    """table [ROWS, W] int32; keys [N]. Returns updated table."""
+    width = table.shape[1]
+    idx = row_indexes(keys, width)  # [ROWS, N]
+    onehot = jax.nn.one_hot(idx, width, dtype=table.dtype)  # [ROWS, N, W]
+    counts = onehot.sum(1)  # [ROWS, W]
+    return jnp.minimum(table + counts, cap)
+
+
+def cms_estimate_ref(table, keys):
+    """Returns [N] int32 min-over-rows estimates."""
+    width = table.shape[1]
+    idx = row_indexes(keys, width)  # [ROWS, N]
+    vals = jnp.take_along_axis(table, idx, axis=1)  # [ROWS, N]
+    return vals.min(0)

@@ -1,0 +1,27 @@
+"""Jitted wrapper for the wkv6 kernel: pads T to the chunk size, dispatches
+Pallas-on-TPU / interpret-on-CPU, and exposes the same signature as the
+model-side reference."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .wkv6 import DEFAULT_CHUNK, wkv6_pallas
+
+__all__ = ["wkv6"]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv6(r, k, v, w, u, *, chunk: int = DEFAULT_CHUNK):
+    B, T, H, K = r.shape
+    pad = (-T) % chunk
+    if pad:
+        zf = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zf(r), zf(k), zf(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    o = wkv6_pallas(r, k, v, w, u, chunk=chunk,
+                    interpret=jax.default_backend() != "tpu")
+    return o[:, :T]

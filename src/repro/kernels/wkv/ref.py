@@ -1,0 +1,7 @@
+"""Oracle for the wkv6 Pallas kernel: re-exports the model's stepwise scan
+(ground truth) and chunked formulation (algorithm the kernel implements).
+See repro/models/rwkv.py for the math and the overflow-safety notes."""
+
+from repro.models.rwkv import wkv6_chunked, wkv6_scan
+
+__all__ = ["wkv6_scan", "wkv6_chunked"]

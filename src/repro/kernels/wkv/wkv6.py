@@ -1,0 +1,102 @@
+"""Pallas TPU kernel for the RWKV-6 (wkv6) chunked linear recurrence.
+
+TPU adaptation (DESIGN.md §3): the official RWKV CUDA kernel assigns one
+thread per channel and steps token-by-token — meaningless on a systolic
+array. Here each (batch, head) runs the *chunked* formulation: the [K,V]
+state is a VMEM scratch carried across the chunk grid dimension; per chunk
+the intra-chunk contribution is a pairwise-decay masked matmul (MXU) and
+the state update is a [K,C]x[C,V] matmul. The pairwise exponents are
+always <= 0 (overflow-safe for arbitrary data-dependent decays — see the
+model-side notes in repro/models/rwkv.py).
+
+Grid: (B, H, T/C) with the chunk dim fastest — the state scratch resets at
+chunk 0 of each (b, h).
+
+Blocks: r/k/w [C,K], v [C,V] in VMEM; state scratch [K,V] f32. For the
+production head size (K=V=64) and C=64 everything is lane-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, state_ref, *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _reset():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0, 0].astype(jnp.float32)  # [C,K]
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)  # [C,V]
+    w = w_ref[0, 0].astype(jnp.float32)  # [C,K] decays in (0,1)
+    u = u_ref[0].astype(jnp.float32)  # [K] bonus
+
+    logw = jnp.log(jnp.maximum(w, 1e-12))
+    cum = jnp.cumsum(logw, axis=0)  # [C,K] inclusive
+    cprev = cum - logw  # exclusive
+    total = cum[-1:, :]  # [1,K]
+
+    S = state_ref[...]  # [K,V]
+    q_state = r * jnp.exp(cprev)
+    o_inter = jnp.dot(q_state, S, preferred_element_type=jnp.float32)  # [C,V]
+
+    # intra-chunk: pairwise per-k decays (exponent <= 0 for s < t)
+    delta = cprev[:, None, :] - cum[None, :, :]  # [C,C,K]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) > jax.lax.broadcasted_iota(
+        jnp.int32, (chunk, chunk), 1
+    )
+    pair = jnp.where(tri[:, :, None], jnp.exp(delta), 0.0)
+    scores = (r[:, None, :] * k[None, :, :] * pair).sum(-1)  # [C,C]
+    o_intra = jnp.dot(scores, v, preferred_element_type=jnp.float32)
+    o_bonus = ((r * u[None, :]) * k).sum(-1, keepdims=True) * v
+
+    o_ref[0, 0] = (o_inter + o_intra + o_bonus).astype(o_ref.dtype)
+
+    k_end = k * jnp.exp(total - cum)  # [C,K]
+    state_ref[...] = jnp.exp(total[0])[:, None] * S + jnp.dot(
+        k_end.T, v, preferred_element_type=jnp.float32
+    )
+
+
+def wkv6_pallas(r, k, v, w, u, *, chunk: int = DEFAULT_CHUNK, interpret: bool = True):
+    """r,k,w: [B,T,H,K]; v: [B,T,H,V]; u: [H,K] -> o [B,T,H,V].
+
+    T must be a multiple of ``chunk`` (ops.py pads)."""
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    assert T % chunk == 0
+    nc = T // chunk
+    # layout: [B,H,T,*] so the chunk dim is contiguous per (b,h)
+    rt = jnp.swapaxes(r, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    wt = jnp.swapaxes(w, 1, 2)
+
+    spec_k = pl.BlockSpec((1, 1, chunk, K), lambda b, h, c: (b, h, c, 0))
+    spec_v = pl.BlockSpec((1, 1, chunk, V), lambda b, h, c: (b, h, c, 0))
+    out = pl.pallas_call(
+        functools.partial(_wkv6_kernel, chunk=chunk),
+        grid=(B, H, nc),
+        in_specs=[
+            spec_k,  # r
+            spec_k,  # k
+            spec_v,  # v
+            spec_k,  # w
+            pl.BlockSpec((1, K), lambda b, h, c: (h, 0)),  # u
+        ],
+        out_specs=spec_v,
+        out_shape=jax.ShapeDtypeStruct((B, H, T, V), r.dtype),
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(rt, kt, vt, wt, u)
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,280 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production mesh, prove memory fits, and extract roofline terms.
+
+MUST set XLA_FLAGS before any jax import — jax locks the device count on
+first init. Do NOT import this module from tests that need 1 device.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, dryrun_cells, get_config  # noqa: E402
+from repro.distributed.sharding import (  # noqa: E402
+    ShardingPolicy,
+    batch_spec,
+    cache_specs,
+    guard,
+    logits_spec,
+    param_specs,
+    shardings_from_specs,
+)
+from repro.launch import mesh as meshlib  # noqa: E402
+from repro.launch.roofline import model_flops, roofline_terms  # noqa: E402
+from repro.models import LM, PhysPlan  # noqa: E402
+from repro.training.optimizer import AdamWConfig, init_state  # noqa: E402
+from repro.training.train_state import build_train_step  # noqa: E402
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "dryrun_results"
+
+
+def input_specs(cfg, shape, mesh):
+    """ShapeDtypeStruct stand-ins for every model input of the cell —
+    weak-type-correct, shardable, no device allocation."""
+    GB, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        n_img = cfg.num_frontend_tokens if cfg.frontend == "vision" else 0
+        batch = {"tokens": sds((GB, S - n_img), i32)}
+        if shape.kind == "train":
+            batch["targets"] = sds((GB, S - n_img), i32)
+        if cfg.frontend == "vision":
+            batch["frontend"] = sds((GB, n_img, cfg.d_model), jnp.bfloat16)
+        elif cfg.frontend == "audio":
+            batch["frontend"] = sds((GB, S, cfg.d_model), jnp.bfloat16)
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": sds((GB,), i32), "pos": sds((), i32)}
+
+
+def _batch_shardings(batch, mesh):
+    b = batch_spec(mesh)
+    out = {}
+    for k, v in batch.items():
+        spec = P() if v.ndim == 0 else guard(v.shape, P(b[0] if len(b) else None), mesh)
+        out[k] = NamedSharding(mesh, spec)
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               policy: ShardingPolicy | None = None, compile_only: bool = True,
+               opt_overrides: dict | None = None, cfg_transform=None):
+    """Lower + compile one cell. Returns the result record dict.
+    ``cfg_transform``: optional ModelConfig -> ModelConfig hook used by the
+    §Perf hillclimbs (e.g. capacity-factor variants)."""
+    from repro.distributed.sharding import use_mesh
+
+    t0 = time.time()
+    cfg = get_config(arch)
+    if cfg_transform is not None:
+        cfg = cfg_transform(cfg)
+    shape = SHAPES[shape_name]
+    if policy is None:
+        # decode default = weight-stationary serving layout (HC3 outcome):
+        # kills the per-token FSDP weight all-gather (108x collective
+        # reduction on deepseek decode — §Perf), but only when the
+        # TP-sharded weights fit beside the KV cache (<= 2.5 GiB/chip);
+        # larger models keep gathered-FSDP serving.
+        ws = (
+            shape.kind == "decode"
+            and cfg.param_count() * 2 / 16 <= 2.5 * 2**30
+        )
+        policy = ShardingPolicy(fsdp=not ws)
+    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    tp = mesh.shape["model"]
+    plan = PhysPlan.make(cfg, tp=tp)
+    model = LM(cfg, plan=plan, dtype=jnp.bfloat16, remat=True)
+
+    params_shape = model.abstract_params()
+    pspecs = param_specs(params_shape, mesh, policy=policy)
+    p_sh = shardings_from_specs(pspecs, mesh)
+    batch = input_specs(cfg, shape, mesh)
+    b_sh = _batch_shardings(batch, mesh)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(
+            moment_dtype=jnp.bfloat16 if cfg.param_count() > 1e11 else jnp.float32,
+            **(opt_overrides or {}),
+        )
+        opt_shape = jax.eval_shape(lambda p: init_state(opt_cfg, p), params_shape)
+        o_sh = {
+            "step": NamedSharding(mesh, P()),
+            "m": shardings_from_specs(param_specs(opt_shape["m"], mesh, policy=policy), mesh),
+            "v": shardings_from_specs(param_specs(opt_shape["v"], mesh, policy=policy), mesh),
+        }
+        step = build_train_step(model, opt_cfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1),
+        )
+        args = (params_shape, opt_shape, batch)
+    elif shape.kind == "prefill":
+        def prefill_step(params, b):
+            return model.prefill(params, b, max_seq=shape.seq_len)
+
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                     enc_len=shape.seq_len, cache_dtype=jnp.bfloat16)
+        )
+        c_sh = shardings_from_specs(cache_specs(cache_shape, mesh, policy=policy), mesh)
+        l_sh = NamedSharding(
+            mesh, guard((shape.global_batch, cfg.padded_vocab), logits_spec(mesh), mesh)
+        )
+        jitted = jax.jit(
+            prefill_step,
+            in_shardings=(p_sh, b_sh),
+            out_shardings=(l_sh, c_sh),
+        )
+        args = (params_shape, batch)
+    else:  # decode
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                     enc_len=shape.seq_len, cache_dtype=jnp.bfloat16)
+        )
+        c_sh = shardings_from_specs(cache_specs(cache_shape, mesh, policy=policy), mesh)
+
+        def serve_step(params, caches, tokens, pos):
+            return model.decode_step(params, caches, tokens, pos)
+
+        l_sh = NamedSharding(
+            mesh, guard((shape.global_batch, cfg.padded_vocab), logits_spec(mesh), mesh)
+        )
+        jitted = jax.jit(
+            serve_step,
+            in_shardings=(p_sh, c_sh, b_sh["tokens"], b_sh["pos"]),
+            out_shardings=(l_sh, c_sh),
+            donate_argnums=(1,),
+        )
+        args = (params_shape, cache_shape, batch["tokens"], batch["pos"])
+
+    with use_mesh(mesh, policy):
+        lowered = jitted.lower(*args)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+        "policy": dataclasses.asdict(policy),
+        "lower_s": round(time.time() - t0, 1),
+    }
+    if not compile_only:
+        return lowered, rec
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0 - rec["lower_s"], 1)
+    ma = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_gib": ma.argument_size_in_bytes / 2**30,
+        "output_gib": ma.output_size_in_bytes / 2**30,
+        "temp_gib": ma.temp_size_in_bytes / 2**30,
+        "alias_gib": ma.alias_size_in_bytes / 2**30,
+        # donated inputs alias outputs; live set per chip:
+        "peak_gib": (
+            ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+        ) / 2**30,
+        "fits_16g_hbm": (
+            ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+        ) < 16 * 2**30,
+    }
+    ca = compiled.cost_analysis() or {}
+    rec["xla_cost_analysis"] = {
+        "flops_body_once": ca.get("flops", 0.0),
+        "bytes_accessed_body_once": ca.get("bytes accessed", 0.0),
+    }
+    terms = roofline_terms(compiled.as_text())
+    chips = 512 if multi_pod else 256
+    mf = model_flops(cfg, shape, include_backward=(shape.kind == "train"))
+    terms["model_flops_global"] = mf
+    terms["model_flops_per_chip"] = mf / chips
+    terms["useful_fraction"] = (
+        (mf / chips) / terms["hlo_flops_per_chip"] if terms["hlo_flops_per_chip"] else 0.0
+    )
+    terms["roofline_fraction"] = (
+        (mf / chips / meshlib.PEAK_FLOPS_BF16) / terms["step_s_lower_bound"]
+        if terms["step_s_lower_bound"] else 0.0
+    )
+    rec["roofline"] = terms
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def run_cells(cells, *, multi_pod: bool, out_dir: pathlib.Path, policy=None, tag=""):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    results = []
+    for arch, shape_name, status in cells:
+        key = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}{tag}"
+        path = out_dir / f"{key}.json"
+        if path.exists():
+            print(f"[skip-cached] {key}", flush=True)
+            results.append(json.loads(path.read_text()))
+            continue
+        if status != "run":
+            rec = {"arch": arch, "shape": shape_name,
+                   "mesh": "2x16x16" if multi_pod else "16x16",
+                   "status": status}
+            path.write_text(json.dumps(rec, indent=1))
+            print(f"[{status}] {key}", flush=True)
+            results.append(rec)
+            continue
+        print(f"[lower+compile] {key} ...", flush=True)
+        try:
+            rec = lower_cell(arch, shape_name, multi_pod=multi_pod, policy=policy)
+            rec["status"] = "ok"
+        except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+            rec = {"arch": arch, "shape": shape_name, "status": "error",
+                   "mesh": "2x16x16" if multi_pod else "16x16",
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+        path.write_text(json.dumps(rec, indent=1))
+        dom = rec.get("roofline", {}).get("dominant", "-")
+        peak = rec.get("memory", {}).get("peak_gib", float("nan"))
+        print(f"    -> {rec['status']} peak={peak:.2f}GiB dominant={dom} "
+              f"({rec.get('total_s', 0)}s)", flush=True)
+        results.append(rec)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    args = ap.parse_args()
+
+    cells = dryrun_cells()
+    if args.arch:
+        cells = [c for c in cells if c[0] == args.arch]
+    if args.shape:
+        cells = [c for c in cells if c[1] == args.shape]
+    if not (args.all or args.arch or args.shape):
+        ap.error("pass --all or --arch/--shape")
+
+    out_dir = pathlib.Path(args.out)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for mp in meshes:
+        run_cells(cells, multi_pod=mp, out_dir=out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,474 @@
+"""Roofline analysis from compiled (SPMD-partitioned) HLO text.
+
+Why a custom analyzer: ``compiled.cost_analysis()`` counts ``while`` bodies
+ONCE, but our models scan over layers — a 40-layer model would be accounted
+as one layer (verified experimentally; see EXPERIMENTS.md §Dry-run). This
+module parses ``compiled.as_text()`` and applies loop trip counts.
+
+Per-chip metrics (compiled HLO shapes are per-shard, so sums are per-chip):
+
+* **flops** — 2 * prod(result dims) * prod(contracting dims) per ``dot``
+  (recursing into fusions), times enclosing-loop trip counts. Elementwise
+  FLOPs are ignored (matmul-dominated workloads; documented).
+* **memory bytes** — a traffic model: for every materialized instruction,
+  operand bytes + result bytes (fusion boundaries in optimized HLO are
+  exactly the HBM-materialization boundaries). ``dynamic-slice`` /
+  ``dynamic-update-slice`` count only the slice moved (2x), not the backing
+  buffer. Control ops (parameter/gte/tuple/bitcast/constant/while) are free.
+* **collective bytes** — ring-model traffic per chip:
+  all-gather/all-to-all: result*(n-1)/n; all-reduce: 2*result*(n-1)/n;
+  reduce-scatter: result*(n-1); collective-permute: result. ``n`` parsed
+  from ``replica_groups``.
+
+Terms (TPU v5e): compute = flops/197e12, memory = bytes/819e9,
+collective = coll_bytes/50e9 (single-link conservative; see launch/mesh.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16, "token": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# result type is matched non-greedily up to the first lowercase-word-paren,
+# which is the opcode — tuple types contain '/*index=N*/' comments (with '='
+# signs) and layout annotations, so anything simpler misparses while loops.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([a-z][a-z0-9\-]*)\((.*)$"
+)
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.+\s*\{")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of 'bf16[2,3]{...}' or a tuple '(f32[2], s32[])'."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    # scalars like 'f32[]' match with empty dims -> handled (n=1)
+    if total == 0 and "[" not in shape_str:
+        total = DTYPE_BYTES.get(shape_str.strip("() "), 0)
+    return total
+
+
+def _shape_dims(shape_str: str) -> tuple[int, ...]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return ()
+    return tuple(int(d) for d in m.group(2).split(",") if d)
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    opcode: str
+    rest: str  # operands + attributes
+    result_bytes: int
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    entry: bool
+    instrs: list
+    shapes: dict  # instr name -> shape str
+
+
+class HloAnalysis:
+    def __init__(self, hlo_text: str):
+        self.comps: dict[str, Computation] = {}
+        self.entry: str | None = None
+        self._parse(hlo_text)
+        self._flops_cache: dict[str, float] = {}
+        self._bytes_cache: dict[str, float] = {}
+        self._coll_cache: dict[str, float] = {}
+        self._coll_count_cache: dict[str, float] = {}
+
+    # -- parsing ---------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        cur: Computation | None = None
+        for line in text.splitlines():
+            hdr = _COMP_HDR.match(line)
+            if hdr:
+                cur = Computation(hdr.group(2), bool(hdr.group(1)), [], {})
+                self.comps[cur.name] = cur
+                if cur.entry:
+                    self.entry = cur.name
+                continue
+            if cur is None:
+                continue
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, shape, opcode, rest = m.groups()
+            inst = Instr(name, shape, opcode, rest, _shape_bytes(shape))
+            cur.instrs.append(inst)
+            cur.shapes[name] = shape
+
+    # -- helpers -----------------------------------------------------------
+    def _operands(self, inst: Instr) -> list[str]:
+        # operand list runs until the matching close paren; names are %foo
+        depth = 1
+        out = []
+        token = ""
+        for ch in inst.rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            token += ch
+        return re.findall(r"%([\w.\-]+)", token)
+
+    def _attr(self, inst: Instr, key: str) -> str | None:
+        m = re.search(key + r"=%?([\w.\-]+)", inst.rest)
+        return m.group(1) if m else None
+
+    def _trip_count(self, cond_name: str) -> int:
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return 1
+        best = 1
+        for inst in comp.instrs:
+            if inst.opcode == "constant" and inst.shape.startswith("s32"):
+                m = re.match(r"(\d+)\)?", inst.rest)
+                if m:
+                    best = max(best, int(m.group(1)))
+        return best
+
+    def _group_size(self, inst: Instr) -> int:
+        m = re.search(r"replica_groups=\[(\d+),(\d+)\]", inst.rest)
+        if m:
+            return int(m.group(2))
+        m = re.search(r"replica_groups=\{\{([\d,]+)\}", inst.rest)
+        if m:
+            return len(m.group(1).split(","))
+        return 2
+
+    # -- per-computation metrics (memoized, loop-aware) ----------------------
+    def flops(self, comp_name: str | None = None) -> float:
+        comp_name = comp_name or self.entry
+        if comp_name in self._flops_cache:
+            return self._flops_cache[comp_name]
+        comp = self.comps.get(comp_name)
+        total = 0.0
+        if comp is None:
+            return 0.0
+        self._flops_cache[comp_name] = 0.0  # cycle guard
+        for inst in comp.instrs:
+            if inst.opcode == "dot":
+                ops = self._operands(inst)
+                lhs_shape = comp.shapes.get(ops[0], "") if ops else ""
+                m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.rest)
+                cdims = [int(x) for x in m.group(1).split(",") if x] if m else []
+                lhs_dims = _shape_dims(lhs_shape)
+                contract = 1
+                for c in cdims:
+                    if c < len(lhs_dims):
+                        contract *= lhs_dims[c]
+                result_elems = 1
+                for d in _shape_dims(inst.shape):
+                    result_elems *= d
+                total += 2.0 * result_elems * contract
+            elif inst.opcode == "while":
+                body = self._attr(inst, "body")
+                cond = self._attr(inst, "condition")
+                trip = self._trip_count(cond) if cond else 1
+                total += trip * (self.flops(body) if body else 0.0)
+            elif inst.opcode in ("fusion", "call", "conditional"):
+                callee = self._attr(inst, "calls") or self._attr(inst, "to_apply")
+                if callee and ("wrapped" not in (callee or "") or True):
+                    total += self.flops(callee)
+        self._flops_cache[comp_name] = total
+        return total
+
+    _FREE = {
+        "parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+        "while", "after-all", "partition-id", "replica-id", "iota",
+    }
+    # Standalone elementwise/broadcast ops: the CPU backend leaves these
+    # unfused, but XLA-TPU fuses them into their matmul/reduce consumers —
+    # counting them as HBM traffic would overstate the TPU memory term by
+    # ~10x (measured on smollm train_4k; EXPERIMENTS.md §Dry-run). The
+    # remaining counted set (dot/fusion/copy/transpose/convert/slice/
+    # scatter/gather/reduce) is what actually materializes.
+    _FUSED_ON_TPU = {
+        "add", "subtract", "multiply", "divide", "select", "exponential",
+        "exponential-minus-one", "tanh", "maximum", "minimum", "compare",
+        "and", "or", "not", "xor", "broadcast", "reshape", "rsqrt", "sqrt",
+        "log", "log-plus-one", "negate", "abs", "power", "sign", "floor",
+        "ceil", "round-nearest-afz", "clamp", "is-finite", "shift-left",
+        "shift-right-logical", "shift-right-arithmetic", "concatenate",
+        "reverse", "pad", "map", "reduce-precision",
+        # dtype/layout changes: the CPU backend materializes f32 upcasts
+        # around bf16 dots (no native bf16 matmul) and standalone
+        # transposes; TPU handles both natively / via layout assignment —
+        # counting them would overstate the TPU memory term ~10x
+        # (measured on smollm decode_32k; EXPERIMENTS.md §Perf HC1).
+        "convert", "transpose",
+    }
+
+    @staticmethod
+    def _fusion_traffic(inst: Instr, comp: Computation, operands, trips: int = 1) -> float:
+        """Fusions with an operand of the result's shape are in-place
+        updates (scan-carried caches/accumulators): the big buffer is
+        aliased, only the remaining operands + a slice-sized write move.
+        Operands whose LEADING DIM equals the enclosing loop's trip count
+        are scan xs (dynamic-sliced per iteration): they stream through
+        once across the whole loop, so their bytes are amortized /trips."""
+        rshape = inst.shape
+        rdims = _shape_dims(rshape)
+        # pure dtype-conversion fusions (same dims, different dtype, one
+        # real operand) exist only because the CPU backend lacks native
+        # bf16 matmuls; the TPU MXU reads bf16 directly -> free.
+        op_shapes = [comp.shapes.get(o, "") for o in set(operands)]
+        big_ops = [o for o in op_shapes if _shape_bytes(o) > 0.25 * max(1, _shape_bytes(rshape))]
+        if (
+            len(big_ops) == 1
+            and sorted(_shape_dims(big_ops[0])) == sorted(rdims)
+            and big_ops[0].split("[")[0] != rshape.split("[")[0]
+        ):
+            return 0.0
+        opb = 0.0
+        aliased = False
+        for o in set(operands):
+            oshape = comp.shapes.get(o, "")
+            if not aliased and oshape.split("{")[0] == rshape.split("{")[0]:
+                aliased = True  # alias credit (once)
+                continue
+            b = _shape_bytes(oshape)
+            dims = _shape_dims(oshape)
+            if trips > 1 and dims and dims[0] == trips:
+                b = b / trips  # scan xs: sliced per iteration
+            opb += b
+        return opb + (0.0 if aliased else _shape_bytes(rshape))
+
+    def memory_bytes(self, comp_name: str | None = None, trips: int = 1) -> float:
+        comp_name = comp_name or self.entry
+        key = (comp_name, trips)
+        if key in self._bytes_cache:
+            return self._bytes_cache[key]
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return 0.0
+        self._bytes_cache[key] = 0.0
+        total = 0.0
+        for inst in comp.instrs:
+            if inst.opcode == "while":
+                body = self._attr(inst, "body")
+                cond = self._attr(inst, "condition")
+                trip = self._trip_count(cond) if cond else 1
+                total += trip * (self.memory_bytes(body, trip) if body else 0.0)
+                continue
+            if inst.opcode in self._FREE or inst.opcode in self._FUSED_ON_TPU:
+                continue
+            if inst.opcode == "dynamic-slice":
+                total += 2.0 * inst.result_bytes
+                continue
+            if inst.opcode == "dynamic-update-slice":
+                ops = self._operands(inst)
+                upd = comp.shapes.get(ops[1], "") if len(ops) > 1 else ""
+                total += 2.0 * _shape_bytes(upd)
+                continue
+            if inst.opcode in ("reduce", "reduce-window"):
+                ops = self._operands(inst)
+                total += sum(_shape_bytes(comp.shapes.get(o, "")) for o in set(ops))
+                total += inst.result_bytes
+                continue
+            ops = self._operands(inst)
+            if inst.opcode == "fusion":
+                total += self._fusion_traffic(inst, comp, ops, trips)
+                continue
+            if inst.opcode == "dot" and trips > 1:
+                opb = 0.0
+                for o in set(ops):
+                    oshape = comp.shapes.get(o, "")
+                    b = _shape_bytes(oshape)
+                    dims = _shape_dims(oshape)
+                    if dims and dims[0] == trips:
+                        b = b / trips
+                    opb += b
+                total += opb + inst.result_bytes
+                continue
+            opb = sum(_shape_bytes(comp.shapes.get(o, "")) for o in set(ops))
+            total += opb + inst.result_bytes
+        self._bytes_cache[key] = total
+        return total
+
+    def collective_bytes(self, comp_name: str | None = None) -> float:
+        comp_name = comp_name or self.entry
+        if comp_name in self._coll_cache:
+            return self._coll_cache[comp_name]
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return 0.0
+        self._coll_cache[comp_name] = 0.0
+        total = 0.0
+        for inst in comp.instrs:
+            base = inst.opcode.removesuffix("-start")
+            if base in COLLECTIVES:
+                n = self._group_size(inst)
+                r = inst.result_bytes
+                if base == "all-gather":
+                    total += r * (n - 1) / n
+                elif base == "all-reduce":
+                    total += 2.0 * r * (n - 1) / n
+                elif base == "reduce-scatter":
+                    total += r * (n - 1)
+                elif base == "all-to-all":
+                    total += r * (n - 1) / n
+                else:  # collective-permute
+                    total += r
+            elif inst.opcode == "while":
+                body = self._attr(inst, "body")
+                cond = self._attr(inst, "condition")
+                trip = self._trip_count(cond) if cond else 1
+                total += trip * (self.collective_bytes(body) if body else 0.0)
+            elif inst.opcode in ("fusion", "call", "conditional"):
+                callee = self._attr(inst, "calls") or self._attr(inst, "to_apply")
+                if callee:
+                    total += self.collective_bytes(callee)
+        self._coll_cache[comp_name] = total
+        return total
+
+    def collective_count(self) -> dict[str, int]:
+        counts: dict[str, int] = {}
+        for comp in self.comps.values():
+            for inst in comp.instrs:
+                base = inst.opcode.removesuffix("-start")
+                if base in COLLECTIVES:
+                    counts[base] = counts.get(base, 0) + 1
+        return counts
+
+    def collective_breakdown(self, top: int = 12) -> list[dict]:
+        """Largest collective contributors (bytes x enclosing trip counts),
+        for targeting §Perf iterations."""
+        trip_of: dict[str, int] = {}
+        for comp in self.comps.values():
+            for inst in comp.instrs:
+                if inst.opcode == "while":
+                    body = self._attr(inst, "body")
+                    cond = self._attr(inst, "condition")
+                    if body:
+                        trip_of[body] = self._trip_count(cond) if cond else 1
+        out = []
+        for comp in self.comps.values():
+            mult = trip_of.get(comp.name, 1)
+            for inst in comp.instrs:
+                base = inst.opcode.removesuffix("-start")
+                if base in COLLECTIVES:
+                    n = self._group_size(inst)
+                    r = inst.result_bytes
+                    traffic = {
+                        "all-gather": r * (n - 1) / n,
+                        "all-reduce": 2.0 * r * (n - 1) / n,
+                        "reduce-scatter": r * (n - 1),
+                        "all-to-all": r * (n - 1) / n,
+                        "collective-permute": float(r),
+                    }[base]
+                    out.append({
+                        "op": base, "bytes": r, "group": n, "trips": mult,
+                        "traffic": traffic * mult, "shape": inst.shape[:60],
+                    })
+        out.sort(key=lambda d: -d["traffic"])
+        return out[:top]
+
+    def memory_breakdown(self, top: int = 12) -> list[dict]:
+        """Largest HBM-traffic contributors (per the §Roofline traffic
+        model), trip-count weighted."""
+        trip_of: dict[str, int] = {}
+        for comp in self.comps.values():
+            for inst in comp.instrs:
+                if inst.opcode == "while":
+                    body = self._attr(inst, "body")
+                    cond = self._attr(inst, "condition")
+                    if body:
+                        trip_of[body] = self._trip_count(cond) if cond else 1
+        out = []
+        for comp in self.comps.values():
+            mult = trip_of.get(comp.name, 1)
+            for inst in comp.instrs:
+                if inst.opcode in self._FREE or inst.opcode in self._FUSED_ON_TPU:
+                    continue
+                if inst.opcode == "dynamic-slice":
+                    traffic = 2.0 * inst.result_bytes
+                elif inst.opcode == "dynamic-update-slice":
+                    ops = self._operands(inst)
+                    upd = comp.shapes.get(ops[1], "") if len(ops) > 1 else ""
+                    traffic = 2.0 * _shape_bytes(upd)
+                elif inst.opcode == "fusion":
+                    traffic = self._fusion_traffic(inst, comp, self._operands(inst), mult)
+                else:
+                    ops = self._operands(inst)
+                    traffic = sum(
+                        _shape_bytes(comp.shapes.get(o, "")) for o in set(ops)
+                    ) + inst.result_bytes
+                if traffic * mult > 1 << 26:
+                    out.append({
+                        "op": inst.opcode, "traffic": traffic * mult,
+                        "trips": mult, "shape": inst.shape[:70],
+                    })
+        out.sort(key=lambda d: -d["traffic"])
+        return out[:top]
+
+
+# -- roofline terms -----------------------------------------------------------
+def roofline_terms(
+    hlo_text: str,
+    *,
+    peak_flops: float = 197e12,
+    hbm_bw: float = 819e9,
+    link_bw: float = 50e9,
+) -> dict:
+    ana = HloAnalysis(hlo_text)
+    flops = ana.flops()
+    mem = ana.memory_bytes()
+    coll = ana.collective_bytes()
+    compute_s = flops / peak_flops
+    memory_s = mem / hbm_bw
+    coll_s = coll / link_bw
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", coll_s),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": mem,
+        "collective_bytes_per_chip": coll,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dominant,
+        "collective_counts": ana.collective_count(),
+        "step_s_lower_bound": max(compute_s, memory_s, coll_s),
+    }
+
+
+def model_flops(cfg, shape, *, include_backward: bool) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D (train) / 2·N_active·D (forward), D =
+    processed tokens (global)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

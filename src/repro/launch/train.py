@@ -1,0 +1,67 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+CPU-scale by default (reduced config) so the end-to-end driver is runnable
+anywhere; ``--full`` uses the production config (for real TPU slices).
+The loop is the fault-tolerant one (checkpoint/restart, straggler timing,
+optional int8 gradient compression)."""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.models import LM
+from repro.training import AdamWConfig
+from repro.training.data import DataConfig, ShardCache, TokenDataset
+from repro.training.loop import TrainLoopConfig, train
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=ARCHS)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_train")
+    ap.add_argument("--checkpoint-every", type=int, default=25)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--full", action="store_true", help="production config")
+    ap.add_argument("--shard-cache-mb", type=int, default=64,
+                    help="data shard cache (paper AV admission)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.scaled_down()
+    model = LM(cfg, dtype=jnp.float32 if not args.full else jnp.bfloat16,
+               remat=args.full)
+    cache = ShardCache(args.shard_cache_mb << 20, policy="wtlfu-av")
+    ds = TokenDataset(
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                   global_batch=args.global_batch, n_shards=64,
+                   shard_tokens_min=1 << 12, shard_tokens_max=1 << 14),
+        cache=cache,
+    )
+    res = train(
+        model, ds,
+        AdamWConfig(lr=args.lr, warmup_steps=10, total_steps=args.steps),
+        TrainLoopConfig(total_steps=args.steps,
+                        checkpoint_every=args.checkpoint_every,
+                        checkpoint_dir=args.checkpoint_dir,
+                        grad_compression=args.grad_compression),
+    )
+    first = res["metrics"][0]["ce"] if res["metrics"] else float("nan")
+    last = res["metrics"][-1]["ce"] if res["metrics"] else float("nan")
+    print(f"done: steps={res['last_step'] + 1} restarts={res['restarts']} "
+          f"ce {first:.3f} -> {last:.3f}")
+    print(f"shard cache: {cache.policy.stats.hit_ratio:.2%} hit ratio, "
+          f"{cache.fetches} fetches")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Model substrate: one parameterized implementation covering all ten
+assigned architectures (dense GQA / MoE / MLA / Griffin hybrid / RWKV6 /
+encoder-decoder / stub-fronted VLM+audio)."""
+
+from .attention import PhysPlan
+from .transformer import LM
+
+__all__ = ["LM", "PhysPlan", "make_model"]
+
+
+def make_model(cfg, **kw) -> LM:
+    return LM(cfg, **kw)

@@ -1,0 +1,317 @@
+"""Attention variants: GQA (+RoPE, local windows, softcaps, biases) and
+DeepSeek Multi-head Latent Attention (MLA), with train/prefill and
+single-token decode paths.
+
+Physical head planning (``PhysPlan``) decouples the *logical* architecture
+from the *physical* layout required by tensor parallelism: query heads may be
+padded to a multiple of the model axis (padded heads are mathematically inert
+— zero output-projection rows, kept zero by an optimizer mask) and KV heads
+may be replicated ``tp/kv`` ways (standard GQA-under-TP practice). See
+DESIGN.md §6.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import Array, apply_rope, dense_init, softcap, split
+
+NEG_INF = -2.3819763e38  # min bf16-representable-ish; avoids NaN in softmax
+
+
+@dataclasses.dataclass(frozen=True)
+class PhysPlan:
+    """Physical attention layout for a given tensor-parallel degree."""
+
+    num_q: int  # physical query heads (>= logical, padded)
+    num_kv: int  # physical kv heads (replicated to >= tp if sharding)
+    shard_attn: bool  # False -> attention weights replicated over model axis
+    logical_q: int
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_q // self.num_kv
+
+    @staticmethod
+    def make(cfg, tp: int = 1, max_pad_frac: float = 0.25) -> "PhysPlan":
+        nq, nkv = cfg.num_heads, cfg.num_kv_heads
+        if cfg.use_mla:
+            # MLA latent cache is head-agnostic; shard heads iff divisible.
+            return PhysPlan(nq, nkv, shard_attn=(nq % tp == 0), logical_q=nq)
+        if tp <= 1:
+            return PhysPlan(nq, nkv, True, nq)
+        pad_q = ((nq + tp - 1) // tp) * tp
+        if pad_q != nq and (pad_q - nq) / nq > max_pad_frac:
+            return PhysPlan(nq, nkv, False, nq)  # replicate attention
+        # kv replication: need kv_phys divisible by tp AND q_phys % kv_phys == 0
+        kv_phys = nkv
+        if nkv % tp != 0:
+            if tp % nkv == 0:
+                kv_phys = tp
+            else:
+                return PhysPlan(nq, nkv, False, nq)
+        if pad_q % kv_phys != 0:
+            return PhysPlan(nq, nkv, False, nq)
+        return PhysPlan(pad_q, kv_phys, True, nq)
+
+
+# -- parameter init -----------------------------------------------------------
+def init_attention(key, cfg, plan: PhysPlan, dtype=jnp.float32) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko, kb = split(key, 5)
+    p = {
+        "wq": dense_init(kq, d, plan.num_q, hd, dtype=dtype),
+        "wk": dense_init(kk, d, plan.num_kv, hd, dtype=dtype),
+        "wv": dense_init(kv, d, plan.num_kv, hd, dtype=dtype),
+        "wo": dense_init(ko, plan.num_q, hd, d, dtype=dtype),
+    }
+    if plan.num_q != plan.logical_q:  # zero the padded region (inert heads)
+        mask = (jnp.arange(plan.num_q) < plan.logical_q).astype(dtype)
+        p["wo"] = p["wo"] * mask[:, None, None]
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((plan.num_q, hd), dtype)
+        p["bk"] = jnp.zeros((plan.num_kv, hd), dtype)
+        p["bv"] = jnp.zeros((plan.num_kv, hd), dtype)
+    return p
+
+
+def wo_pad_mask(cfg, plan: PhysPlan) -> Array | None:
+    """Optimizer mask keeping padded-head output rows at zero."""
+    if plan.num_q == plan.logical_q:
+        return None
+    return (jnp.arange(plan.num_q) < plan.logical_q).astype(jnp.float32)[:, None, None]
+
+
+def _qkv(p, cfg, x: Array, positions: Array, rope: bool = True):
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, p["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _scale(cfg) -> float:
+    if cfg.query_pre_attn_scalar is not None:
+        return cfg.query_pre_attn_scalar ** -0.5
+    return cfg.resolved_head_dim ** -0.5
+
+
+def _sdpa(cfg, q: Array, k: Array, v: Array, mask: Array) -> Array:
+    """Grouped scaled-dot-product attention.
+
+    q: [B,S,nq,hd]; k,v: [B,T,nkv,hd]; mask: bool broadcastable to [B,S,T].
+    """
+    nq, nkv = q.shape[2], k.shape[2]
+    g = nq // nkv
+    B, S = q.shape[0], q.shape[1]
+    T = k.shape[1]
+    qg = q.reshape(B, S, nkv, g, q.shape[3])
+    scores = jnp.einsum("bsngh,btnh->bnsgt", qg * _scale(cfg), k)
+    scores = softcap(scores, cfg.attn_logit_softcap)
+    m5 = mask[:, None, :, None, :]  # [B?,1,S,1,T]
+    scores = jnp.where(m5, scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    ctx = jnp.einsum("bnsgt,btnh->bsngh", probs, v)
+    return ctx.reshape(B, S, nq, q.shape[3])
+
+
+def causal_mask(S: int, T: int, offset: int = 0, window: int | None = None) -> Array:
+    """[1,S,T] boolean mask; query i attends keys j with j <= i+offset and,
+    if windowed, j > i+offset-window."""
+    qi = jnp.arange(S)[:, None] + offset
+    kj = jnp.arange(T)[None, :]
+    m = kj <= qi
+    if window is not None:
+        m &= kj > qi - window
+    return m[None]
+
+
+# -- full-sequence (train / prefill) -------------------------------------------
+FLASH_THRESHOLD = 2048  # sequences beyond this use the chunked flash path
+
+
+def _flash(cfg, q, k, v, *, causal: bool, window: int | None):
+    from repro.kernels.attention import flash_attention
+
+    return flash_attention(
+        q, k, v, _scale(cfg), causal, window, cfg.attn_logit_softcap
+    )
+
+
+def attention(p, cfg, x: Array, positions: Array, *, window: int | None = None,
+              return_kv: bool = False):
+    """Causal (optionally windowed) self-attention over a full sequence.
+    Long sequences take the flash (chunked online-softmax) path — the dense
+    path would materialize the [S,T] score matrix."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    if S > FLASH_THRESHOLD:
+        ctx = _flash(cfg, q, k, v, causal=True, window=window)
+    else:
+        mask = causal_mask(S, S, window=window)
+        ctx = _sdpa(cfg, q, k, v, mask)
+    out = jnp.einsum("bsnh,nhd->bsd", ctx, p["wo"])
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def encoder_attention(p, cfg, x: Array, positions: Array) -> Array:
+    """Bidirectional (non-causal) self-attention for encoder layers."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    if S > FLASH_THRESHOLD:
+        ctx = _flash(cfg, q, k, v, causal=False, window=None)
+    else:
+        ctx = _sdpa(cfg, q, k, v, jnp.ones((1, S, S), bool))
+    return jnp.einsum("bsnh,nhd->bsd", ctx, p["wo"])
+
+
+def cross_attention(p, cfg, x: Array, enc) -> Array:
+    """Encoder-decoder cross attention. ``enc`` is either the encoder hidden
+    states [B,T,d] (train/prefill: K/V projected here) or a precomputed
+    ``(k, v)`` tuple (decode: cached)."""
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    k, v = enc if isinstance(enc, tuple) else encode_kv(p, cfg, enc)
+    mask = jnp.ones((1, q.shape[1], k.shape[1]), bool)
+    ctx = _sdpa(cfg, q, k.astype(q.dtype), v.astype(q.dtype), mask)
+    return jnp.einsum("bsnh,nhd->bsd", ctx, p["wo"])
+
+
+def encode_kv(p, cfg, enc_out: Array) -> tuple[Array, Array]:
+    k = jnp.einsum("bsd,dnh->bsnh", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", enc_out, p["wv"])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    return k, v
+
+
+# -- single-token decode ---------------------------------------------------------
+def attention_decode(p, cfg, x: Array, pos: Array, kcache: Array, vcache: Array,
+                     *, window: int | None = None):
+    """One decode step with a preallocated KV cache.
+
+    x: [B,1,d]; pos: scalar int32 (synchronized batch decode);
+    kcache/vcache: [B,S_max,nkv,hd]. For windowed attention the cache is a
+    RING BUFFER of length `window` (slot = pos % window; every resident key
+    carries its RoPE rotation from write time, so slot order is irrelevant
+    to the softmax). Returns (out [B,1,d], k', v').
+    """
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q, k, v = _qkv(p, cfg, x, positions)
+    T = kcache.shape[1]
+    if window is not None:
+        slot = pos % T
+        kj = jnp.arange(T)[None, None, :]
+        mask = (kj <= pos) | (pos >= T)  # ring full -> all slots live
+    else:
+        slot = pos
+        kj = jnp.arange(T)[None, None, :]
+        mask = kj <= pos
+    kcache = jax.lax.dynamic_update_slice(kcache, k.astype(kcache.dtype), (0, slot, 0, 0))
+    vcache = jax.lax.dynamic_update_slice(vcache, v.astype(vcache.dtype), (0, slot, 0, 0))
+    ctx = _sdpa(cfg, q, kcache.astype(q.dtype), vcache.astype(q.dtype), mask)
+    out = jnp.einsum("bsnh,nhd->bsd", ctx, p["wo"])
+    return out, kcache, vcache
+
+
+# ==============================  MLA  =========================================
+def init_mla(key, cfg, plan: PhysPlan, dtype=jnp.float32) -> dict:
+    d, nq = cfg.d_model, plan.num_q
+    r, dr, dn, dv = cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim
+    kq, kkv, kr, kuk, kuv, ko = split(key, 6)
+    return {
+        "wq": dense_init(kq, d, nq, dn + dr, dtype=dtype),  # lite: no q-lora
+        "w_dkv": dense_init(kkv, d, r, dtype=dtype),  # latent down-proj
+        "w_kr": dense_init(kr, d, dr, dtype=dtype),  # shared rope key
+        "w_uk": dense_init(kuk, r, nq, dn, dtype=dtype),  # latent -> keys
+        "w_uv": dense_init(kuv, r, nq, dv, dtype=dtype),  # latent -> values
+        "wo": dense_init(ko, nq, dv, d, dtype=dtype),
+    }
+
+
+def _mla_scale(cfg) -> float:
+    return (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+
+
+def mla_attention(p, cfg, x: Array, positions: Array, *, return_kv: bool = False):
+    """MLA over a full sequence (expanded form, used in train/prefill).
+    Long sequences concatenate (nope, rope) into one head dim and take the
+    flash path (score = q_nope·k_nope + q_rope·k_rope = concat dot)."""
+    B, S, _ = x.shape
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    nq = p["wq"].shape[1]
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])  # [B,S,r] latent
+    k_rope = apply_rope(
+        jnp.einsum("bsd,dh->bsh", x, p["w_kr"])[:, :, None, :], positions, cfg.rope_theta
+    )  # [B,S,1,dr] shared across heads
+    k_nope = jnp.einsum("bsr,rnh->bsnh", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rnh->bsnh", c_kv, p["w_uv"])
+    if S > FLASH_THRESHOLD:
+        from repro.kernels.attention import flash_attention
+
+        q_cat = jnp.concatenate([q_nope, q_rope], -1)
+        k_cat = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (B, S, nq, dr))], -1
+        )
+        ctx = flash_attention(q_cat, k_cat, v, _mla_scale(cfg), True, None, None)
+    else:
+        scores = (
+            jnp.einsum("bsnh,btnh->bnst", q_nope, k_nope)
+            + jnp.einsum("bsnh,bth->bnst", q_rope, k_rope[:, :, 0, :])
+        ) * _mla_scale(cfg)
+        mask = causal_mask(S, S)
+        scores = jnp.where(mask[:, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(x.dtype)
+        ctx = jnp.einsum("bnst,btnh->bsnh", probs, v)
+    out = jnp.einsum("bsnh,nhd->bsd", ctx, p["wo"])
+    if return_kv:
+        return out, (c_kv, k_rope[:, :, 0, :])
+    return out
+
+
+def mla_decode(p, cfg, x: Array, pos: Array, ckv_cache: Array, krope_cache: Array):
+    """One MLA decode step with *weight absorption* (latent-space attention):
+    the cache holds only [B,S,r] latents + [B,S,dr] rope keys — the paper-
+    relevant property (tiny KV objects) and DeepSeek's deployment trick.
+    """
+    B = x.shape[0]
+    dn, dr, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.kv_lora_rank
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)[:, 0]  # [B,n,dr]
+    c_kv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])  # [B,1,r]
+    k_rope = apply_rope(
+        jnp.einsum("bsd,dh->bsh", x, p["w_kr"])[:, :, None, :], positions, cfg.rope_theta
+    )[:, :, 0, :]  # [B,1,dr]
+    ckv_cache = jax.lax.dynamic_update_slice(ckv_cache, c_kv.astype(ckv_cache.dtype), (0, pos, 0))
+    krope_cache = jax.lax.dynamic_update_slice(
+        krope_cache, k_rope.astype(krope_cache.dtype), (0, pos, 0)
+    )
+    # absorb W_uk into the query: q_lat [B,n,r]
+    q_lat = jnp.einsum("bnh,rnh->bnr", q_nope[:, 0], p["w_uk"])
+    scores = (
+        jnp.einsum("bnr,btr->bnt", q_lat, ckv_cache.astype(x.dtype))
+        + jnp.einsum("bnh,bth->bnt", q_rope, krope_cache.astype(x.dtype))
+    ) * _mla_scale(cfg)
+    T = ckv_cache.shape[1]
+    mask = jnp.arange(T)[None, None, :] <= pos
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(x.dtype)
+    ctx_lat = jnp.einsum("bnt,btr->bnr", probs, ckv_cache.astype(x.dtype))
+    ctx = jnp.einsum("bnr,rnh->bnh", ctx_lat, p["w_uv"])  # absorb W_uv out
+    out = jnp.einsum("bnh,nhd->bd", ctx, p["wo"])[:, None, :]
+    return out, ckv_cache, krope_cache

@@ -1,0 +1,293 @@
+"""Layer ("superblock") definitions and the segment-scan machinery.
+
+A model is a list of homogeneous segments (configs/base.py ``layer_plan``);
+each segment stores its per-layer params stacked on a leading ``[repeat]``
+axis and is executed with ``lax.scan`` — bounding HLO size (and hence
+compile time) regardless of depth, which the 512-device dry-run depends on.
+
+Sub-layer kinds handled here: dense / dense_local / moe / mla_dense /
+mla_moe / rglru / rwkv / enc / dec (see configs/base.py Segment).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import rwkv as rwkv_mod
+from .attention import (
+    PhysPlan,
+    attention,
+    attention_decode,
+    cross_attention,
+    encode_kv,
+    init_attention,
+    init_mla,
+    mla_attention,
+    mla_decode,
+)
+from .common import Array, apply_ffn, apply_norm, init_ffn, init_norm, split
+from .moe import apply_moe, init_moe
+from .rglru import init_rglru_block, rglru_block, rglru_decode
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_sublayer(key, cfg, kind: str, plan: PhysPlan, dtype) -> dict:
+    k1, k2, k3, k4, k5 = split(key, 5)
+    p: dict = {"norm1": init_norm(cfg, dtype)}
+    if kind in ("dense", "dense_local", "enc", "dec"):
+        p["attn"] = init_attention(k1, cfg, plan, dtype)
+        p["norm2"] = init_norm(cfg, dtype)
+        p["ffn"] = init_ffn(k2, cfg.d_model, cfg.d_ff, cfg.ffn_act, dtype)
+        if kind == "dec":
+            p["xattn"] = init_attention(k3, cfg, plan, dtype)
+            p["norm_x"] = init_norm(cfg, dtype)
+    elif kind in ("moe", "mla_moe", "mla_dense"):
+        p["attn"] = (
+            init_mla(k1, cfg, plan, dtype) if cfg.use_mla else init_attention(k1, cfg, plan, dtype)
+        )
+        p["norm2"] = init_norm(cfg, dtype)
+        if kind.endswith("moe"):
+            p["moe"] = init_moe(k2, cfg, dtype)
+        else:
+            p["ffn"] = init_ffn(k2, cfg.d_model, cfg.d_ff, cfg.ffn_act, dtype)
+    elif kind == "rglru":
+        p["rec"] = init_rglru_block(k1, cfg, dtype)
+        p["norm2"] = init_norm(cfg, dtype)
+        p["ffn"] = init_ffn(k2, cfg.d_model, cfg.d_ff, cfg.ffn_act, dtype)
+    elif kind == "rwkv":
+        p["rwkv"] = rwkv_mod.init_rwkv_block(k1, cfg, dtype)
+        p["norm2"] = init_norm(cfg, dtype)
+    else:
+        raise ValueError(f"unknown sublayer kind {kind}")
+    return p
+
+
+def init_superblock(key, cfg, kinds: tuple[str, ...], plan: PhysPlan, dtype) -> dict:
+    keys = split(key, len(kinds))
+    return {str(i): init_sublayer(k, cfg, kind, plan, dtype) for i, (k, kind) in enumerate(zip(keys, kinds))}
+
+
+def init_segment(key, cfg, seg, plan: PhysPlan, dtype) -> dict:
+    keys = jax.random.split(key, seg.repeat)
+    return jax.vmap(lambda k: init_superblock(k, cfg, seg.kinds, plan, dtype))(keys)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence application (train / prefill)
+# ---------------------------------------------------------------------------
+def apply_sublayer(p, cfg, kind: str, x: Array, positions: Array, *,
+                   enc_out: Array | None = None, collect_kv: bool = False,
+                   rwkv_chunked: bool = True):
+    """Returns (x, aux_loss, kv_or_state_or_None).
+
+    With ``collect_kv`` the third return is the decode-cache payload for the
+    sub-layer: (k, v) / (c_kv, k_rope) / (k, v, xk, xv) for attention kinds,
+    or the recurrent state pytree for rwkv/rglru kinds."""
+    aux = jnp.zeros((), jnp.float32)
+    kv = None
+    h = apply_norm(p["norm1"], x)
+    if kind == "rwkv":
+        h2 = apply_norm(p["norm2"], x)
+        if collect_kv:
+            tm, cm, state = rwkv_mod.rwkv_block(
+                p["rwkv"], cfg, h, h2, chunked=rwkv_chunked, return_state=True
+            )
+            return x + tm + cm, aux, state
+        tm, cm = rwkv_mod.rwkv_block(p["rwkv"], cfg, h, h2, chunked=rwkv_chunked)
+        return x + tm + cm, aux, None
+    if kind == "rglru":
+        if collect_kv:
+            r, state = rglru_block(p["rec"], cfg, h, return_state=True)
+            x = x + r
+        else:
+            x = x + rglru_block(p["rec"], cfg, h)
+            state = None
+        x = x + apply_ffn(p["ffn"], apply_norm(p["norm2"], x), cfg.ffn_act)
+        return x, aux, state
+
+    window = cfg.local_window if kind == "dense_local" else None
+    if cfg.use_mla and kind.startswith("mla"):
+        if collect_kv:
+            a, kv = mla_attention(p["attn"], cfg, h, positions, return_kv=True)
+        else:
+            a = mla_attention(p["attn"], cfg, h, positions)
+    elif kind == "enc":
+        from .attention import encoder_attention
+
+        a = encoder_attention(p["attn"], cfg, h, positions)
+    else:
+        if collect_kv:
+            a, kv = attention(p["attn"], cfg, h, positions, window=window, return_kv=True)
+        else:
+            a = attention(p["attn"], cfg, h, positions, window=window)
+
+    if cfg.parallel_block and "ffn" in p:
+        f = apply_ffn(p["ffn"], h, cfg.ffn_act)  # same norm input (Cohere)
+        return x + a + f, aux, kv
+
+    x = x + a
+    if kind == "dec" and enc_out is not None:
+        hx = apply_norm(p["norm_x"], x)
+        x = x + cross_attention(p["xattn"], cfg, hx, enc_out)
+        if collect_kv and kv is not None:
+            kv = (*kv, *encode_kv(p["xattn"], cfg, enc_out))
+    h2 = apply_norm(p["norm2"], x)
+    if "moe" in p:
+        mo, aux = apply_moe(p["moe"], cfg, h2)
+        x = x + mo
+    else:
+        x = x + apply_ffn(p["ffn"], h2, cfg.ffn_act)
+    return x, aux, kv
+
+
+def apply_superblock(p, cfg, kinds, x, positions, **kw):
+    from repro.distributed.sharding import maybe_constrain
+
+    aux_total = jnp.zeros((), jnp.float32)
+    kvs = {}
+    for i, kind in enumerate(kinds):
+        x, aux, kv = apply_sublayer(p[str(i)], cfg, kind, x, positions, **kw)
+        aux_total += aux
+        if kv is not None:
+            if isinstance(kv, tuple):  # collected KV: pin shardings so the
+                # stacked scan outputs don't replicate (prefill cells)
+                kv = tuple(
+                    maybe_constrain(t, "kv" if t.ndim == 4 else "latent")
+                    for t in kv
+                )
+            kvs[str(i)] = kv
+    return x, aux_total, kvs
+
+
+def scan_segment(seg_params, cfg, seg, x, positions, *, remat=True,
+                 enc_out=None, rwkv_chunked=True):
+    """Full-sequence pass over one segment. Returns (x, aux_sum)."""
+
+    from repro.distributed.sharding import maybe_constrain
+
+    def body(carry, layer_p):
+        xc, aux = carry
+        xn, aux_i, _ = apply_superblock(
+            layer_p, cfg, seg.kinds, xc, positions, enc_out=enc_out,
+            rwkv_chunked=rwkv_chunked,
+        )
+        xn = maybe_constrain(xn, "residual")
+        return (xn, aux + aux_i), None
+
+    fn = jax.checkpoint(body, prevent_cse=False) if remat else body
+    (x, aux), _ = jax.lax.scan(fn, (x, jnp.zeros((), jnp.float32)), seg_params)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# decode state
+# ---------------------------------------------------------------------------
+def init_sublayer_cache(cfg, kind: str, plan: PhysPlan, batch: int, max_seq: int,
+                        enc_len: int, dtype):
+    hd = cfg.resolved_head_dim
+    if kind in ("dense", "dense_local", "moe"):
+        S = min(max_seq, cfg.local_window) if kind == "dense_local" else max_seq
+        return {
+            "k": jnp.zeros((batch, S, plan.num_kv, hd), dtype),
+            "v": jnp.zeros((batch, S, plan.num_kv, hd), dtype),
+        }
+    if kind in ("mla_dense", "mla_moe"):
+        return {
+            "c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_seq, cfg.qk_rope_dim), dtype),
+        }
+    if kind == "dec":
+        return {
+            "k": jnp.zeros((batch, max_seq, plan.num_kv, hd), dtype),
+            "v": jnp.zeros((batch, max_seq, plan.num_kv, hd), dtype),
+            "xk": jnp.zeros((batch, enc_len, plan.num_kv, hd), dtype),
+            "xv": jnp.zeros((batch, enc_len, plan.num_kv, hd), dtype),
+        }
+    if kind == "rglru":
+        return {
+            "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width), dtype),
+        }
+    if kind == "rwkv":
+        H = cfg.d_model // cfg.rwkv_head_dim
+        return {
+            "S": jnp.zeros((batch, H, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32),
+            "tm_prev": jnp.zeros((batch, cfg.d_model), dtype),
+            "cm_prev": jnp.zeros((batch, cfg.d_model), dtype),
+        }
+    raise ValueError(kind)
+
+
+def init_segment_cache(cfg, seg, plan, batch, max_seq, enc_len, dtype):
+    one = {
+        str(i): init_sublayer_cache(cfg, kind, plan, batch, max_seq, enc_len, dtype)
+        for i, kind in enumerate(seg.kinds)
+        if kind != "enc"
+    }
+    return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (seg.repeat, *a.shape)), one)
+
+
+# ---------------------------------------------------------------------------
+# single-token decode
+# ---------------------------------------------------------------------------
+def decode_sublayer(p, cache, cfg, kind: str, x: Array, pos):
+    """x: [B,1,d]. Returns (x, new_cache)."""
+    h = apply_norm(p["norm1"], x)
+    if kind == "rwkv":
+        h2 = apply_norm(p["norm2"], x)
+        tm, cm, cache = rwkv_mod.rwkv_decode(p["rwkv"], cfg, h, h2, cache)
+        return x + tm + cm, cache
+    if kind == "rglru":
+        r, hstate, conv = rglru_decode(p["rec"], cfg, h, cache["h"], cache["conv"])
+        x = x + r
+        x = x + apply_ffn(p["ffn"], apply_norm(p["norm2"], x), cfg.ffn_act)
+        return x, {"h": hstate, "conv": conv}
+
+    if cfg.use_mla and kind.startswith("mla"):
+        a, ckv, krope = mla_decode(p["attn"], cfg, h, pos, cache["c_kv"], cache["k_rope"])
+        cache = {"c_kv": ckv, "k_rope": krope}
+    else:
+        window = cfg.local_window if kind == "dense_local" else None
+        a, k, v = attention_decode(p["attn"], cfg, h, pos, cache["k"], cache["v"],
+                                   window=window)
+        new_cache = dict(cache)
+        new_cache.update(k=k, v=v)
+        cache = new_cache
+
+    if cfg.parallel_block and "ffn" in p:
+        f = apply_ffn(p["ffn"], h, cfg.ffn_act)
+        return x + a + f, cache
+    x = x + a
+    if kind == "dec":
+        hx = apply_norm(p["norm_x"], x)
+        x = x + cross_attention(p["xattn"], cfg, hx, (cache["xk"], cache["xv"]))
+    h2 = apply_norm(p["norm2"], x)
+    if "moe" in p:
+        mo, _ = apply_moe(p["moe"], cfg, h2, capacity=h2.shape[0] * h2.shape[1])
+        x = x + mo
+    else:
+        x = x + apply_ffn(p["ffn"], h2, cfg.ffn_act)
+    return x, cache
+
+
+def decode_superblock(p, caches, cfg, kinds, x, pos):
+    new_caches = {}
+    for i, kind in enumerate(kinds):
+        key = str(i)
+        x, nc = decode_sublayer(p[key], caches.get(key), cfg, kind, x, pos)
+        if nc is not None:
+            new_caches[key] = nc
+    return x, new_caches
+
+
+def scan_segment_decode(seg_params, seg_caches, cfg, seg, x, pos):
+    def body(xc, xs):
+        layer_p, layer_c = xs
+        xn, nc = decode_superblock(layer_p, layer_c, cfg, seg.kinds, xc, pos)
+        return xn, nc
+
+    x, new_caches = jax.lax.scan(body, x, (seg_params, seg_caches))
+    return x, new_caches

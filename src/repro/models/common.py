@@ -1,0 +1,113 @@
+"""Shared model building blocks: norms, RoPE, initializers, FFNs.
+
+Models are functional: params are nested dicts of jnp arrays, created by
+``init_*`` functions and consumed by pure ``apply`` functions. Layer stacks
+are stored with a leading ``[repeat]`` dim and scanned (see blocks.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# -- initializers -----------------------------------------------------------
+def dense_init(key, in_dim: int, *out_dims: int, scale: float = 1.0, dtype=jnp.float32):
+    shape = (in_dim, *out_dims)
+    std = scale / (in_dim ** 0.5)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def split(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+# -- norms -------------------------------------------------------------------
+def init_norm(cfg, dtype=jnp.float32) -> dict:
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,), dtype), "bias": jnp.zeros((cfg.d_model,), dtype)}
+    return {"scale": jnp.ones((cfg.d_model,), dtype)}
+
+
+def apply_norm(p: dict, x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+    var = (xf * xf).mean(-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# -- RoPE ---------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # [head_dim/2]
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] (int)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., seq, hd/2]
+    cos = jnp.cos(angles)[..., :, None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- soft capping (gemma2) -----------------------------------------------------
+def softcap(x: Array, cap: float | None) -> Array:
+    if cap is None:
+        return x
+    return (jnp.tanh(x.astype(jnp.float32) / cap) * cap).astype(x.dtype)
+
+
+# -- FFN -----------------------------------------------------------------------
+def init_ffn(key, d_model: int, d_ff: int, act: str, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = split(key, 3)
+    p = {"w_out": dense_init(k2, d_ff, d_model, dtype=dtype)}
+    if act in ("swiglu", "geglu"):
+        p["w_in"] = dense_init(k1, d_model, d_ff, dtype=dtype)
+        p["w_gate"] = dense_init(k3, d_model, d_ff, dtype=dtype)
+    else:
+        p["w_in"] = dense_init(k1, d_model, d_ff, dtype=dtype)
+    return p
+
+
+def apply_ffn(p: dict, x: Array, act: str) -> Array:
+    h = jnp.einsum("...d,df->...f", x, p["w_in"])
+    if act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("...d,df->...f", x, p["w_gate"])) * h
+    elif act == "geglu":
+        h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, p["w_gate"])) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, p["w_out"])
+
+
+# -- embeddings -----------------------------------------------------------------
+def init_embed(key, cfg, dtype=jnp.float32) -> dict:
+    V = cfg.padded_vocab
+    k1, k2 = split(key, 2)
+    p = {"table": dense_init(k1, V, cfg.d_model, dtype=dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k2, cfg.d_model, V, dtype=dtype)
+    return p
+
+
+def embed_tokens(p: dict, tokens: Array) -> Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def lm_logits(p: dict, x: Array, cfg) -> Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, p["table"])
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, p["lm_head"])
+    return softcap(logits, cfg.final_logit_softcap)

@@ -1,0 +1,168 @@
+"""Mixture-of-Experts FFN: top-k routing with grouped scatter-dispatch and
+batched per-expert matmuls.
+
+Design (TPU-idiomatic, see DESIGN.md §6): dense one-hot dispatch einsums cost
+``T*E*C*d`` MACs — for arctic's 128 experts that is ~70x the useful expert
+FLOPs, so we use the scatter/gather formulation instead:
+
+1. tokens are grouped per sequence (group g = batch row) — routing positions
+   are computed with *within-group* cumsums (no cross-shard cumsum);
+2. token vectors are scattered into a ``[G, E, C, d]`` buffer
+   (G sharded over data, E over model — the EP axis; the scatter carries
+   the token to its expert's shard, lowering to the expert all-to-all);
+3. experts run as batched matmuls ``gecd,edf->gecf`` (zero FLOPs wasted on
+   one-hot contractions; only capacity padding overhead);
+4. outputs gather back per token, weighted by the renormalized gates.
+
+Capacity: C = ceil(cf * T_g * k / E) per group; overflowing tokens drop
+(train-time standard). Decode passes ``capacity >= k`` so nothing drops.
+
+Supports DeepSeek-style shared experts and Arctic-style parallel dense
+residual FFN (configured via MoESpec).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Array, apply_ffn, dense_init, init_ffn, split
+
+
+def init_moe(key, cfg, dtype=jnp.float32) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    kr, ke, ks, kd = split(key, 4)
+    glu = cfg.ffn_act in ("swiglu", "geglu")
+
+    def expert_bank(key, n, ff):
+        k1, k2, k3 = split(key, 3)
+        p = {
+            "w_in": _bank(k1, n, d, ff, dtype),
+            "w_out": _bank(k2, n, ff, d, dtype),
+        }
+        if glu:
+            p["w_gate"] = _bank(k3, n, d, ff, dtype)
+        return p
+
+    p = {
+        "router": dense_init(kr, d, m.num_experts, dtype=jnp.float32),
+        "experts": expert_bank(ke, m.num_experts, m.d_ff_expert),
+    }
+    if m.num_shared:
+        p["shared"] = expert_bank(ks, m.num_shared, m.d_ff_expert)
+    if m.dense_residual:
+        p["dense"] = init_ffn(kd, d, cfg.d_ff, cfg.ffn_act, dtype)
+    return p
+
+
+def _bank(key, n: int, din: int, dout: int, dtype):
+    std = 1.0 / (din ** 0.5)
+    return (jax.random.normal(key, (n, din, dout)) * std).astype(dtype)
+
+
+def _expert_ffn(bank: dict, x: Array, act: str) -> Array:
+    """x: [B,ns,E,C,d] expert-major token buffers; batched matmul per expert."""
+    h = jnp.einsum("bnecd,edf->bnecf", x, bank["w_in"])
+    if act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("bnecd,edf->bnecf", x, bank["w_gate"])) * h
+    elif act == "geglu":
+        h = jax.nn.gelu(jnp.einsum("bnecd,edf->bnecf", x, bank["w_gate"])) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bnecf,efd->bnecd", h, bank["w_out"])
+
+
+def _shared_ffn(bank: dict, x: Array, act: str) -> Array:
+    """Shared (always-on) experts on [B,ns,Tg,d] (keeps activation sharding)."""
+    h = jnp.einsum("bntd,edf->bntef", x, bank["w_in"])
+    if act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("bntd,edf->bntef", x, bank["w_gate"])) * h
+    elif act == "geglu":
+        h = jax.nn.gelu(jnp.einsum("bntd,edf->bntef", x, bank["w_gate"])) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bntef,efd->bntd", h, bank["w_out"])
+
+
+GROUP_TOKENS = 256  # routing-group size (GLaM-style small groups)
+
+
+def apply_moe(p: dict, cfg, x: Array, capacity: int | None = None) -> tuple[Array, Array]:
+    """Returns (output [B,S,d], aux_loss scalar).
+
+    Dispatch/combine are one-hot *einsums* over small token groups
+    ([B, n_grp, Tg, E, C] never materializes beyond [.., E, C] dispatch
+    tensors) — gather/scatter dispatch replicates under GSPMD (observed:
+    48-97GB all-reduces; EXPERIMENTS.md §Dry-run), while einsums partition
+    cleanly: groups follow the activation sharding and the [.., E, C, d]
+    expert buffers are constrained to the EP axis. The one-hot contraction
+    costs ~cf*k/E extra FLOPs (2-18% here) — the GLaM tradeoff."""
+    from repro.distributed.sharding import maybe_constrain
+
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.num_experts, m.top_k
+    Tg = min(GROUP_TOKENS, S)
+    while S % Tg:
+        Tg -= 1
+    ns = S // Tg
+    xg = x.reshape(B, ns, Tg, d)
+
+    logits = jnp.einsum("bntd,de->bnte", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, -1)  # [B,ns,Tg,E]
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # [B,ns,Tg,k]
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    C = capacity if capacity is not None else max(1, int(m.capacity_factor * Tg * k / E))
+    C = min(C, Tg * k)
+
+    # position of each (token, slot) within its (group, expert) queue —
+    # sort-based: all intermediates are [B,ns,Tg*k] or [B,ns,E]
+    Tk = Tg * k
+    flat_e = gate_idx.reshape(B, ns, Tk)
+    b_rows = jnp.arange(B)[:, None, None]
+    n_rows = jnp.arange(ns)[None, :, None]
+    counts = jnp.zeros((B, ns, E), jnp.int32).at[b_rows, n_rows, flat_e].add(1)
+    start = jnp.cumsum(counts, axis=2) - counts  # exclusive
+    order = jnp.argsort(flat_e, axis=2, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=2)
+    rank = jnp.arange(Tk)[None, None, :] - jnp.take_along_axis(start, sorted_e, axis=2)
+    pos = jnp.zeros((B, ns, Tk), jnp.int32).at[b_rows, n_rows, order].set(
+        rank.astype(jnp.int32)
+    )
+    pos = pos.reshape(B, ns, Tg, k)
+    keep = pos < C
+    gate_vals = gate_vals * keep
+
+    # one-hot dispatch [B,ns,Tg,E,C] (built from a fused product over k)
+    oh_e = jax.nn.one_hot(gate_idx, E, dtype=xg.dtype)  # [B,ns,Tg,k,E]
+    oh_c = jax.nn.one_hot(jnp.where(keep, pos, C), C, dtype=xg.dtype)  # drops -> all-zero
+    dispatch = jnp.einsum("bntke,bntkc->bntec", oh_e, oh_c)
+    combine = jnp.einsum("bntke,bntkc,bntk->bntec", oh_e, oh_c,
+                         gate_vals.astype(xg.dtype))
+
+    # explicit bf16 casts at the EP boundary so the dispatch/combine
+    # all-to-alls carry bf16, not accumulator dtype. NOTE: on the CPU
+    # backend XLA hoists its f32 dot-output converts past the reshard so
+    # this is not visible in the CPU-lowered roofline (documented refuted
+    # measurement, §Perf HC2.3); on TPU the MXU emits bf16 directly.
+    expert_in = maybe_constrain(
+        jnp.einsum("bntd,bntec->bnecd", xg, dispatch).astype(xg.dtype), "moe_buf5"
+    )  # [B,ns,E,C,d]
+    expert_out = maybe_constrain(
+        _expert_ffn(p["experts"], expert_in, cfg.ffn_act).astype(xg.dtype), "moe_buf5"
+    )
+    out = jnp.einsum("bnecd,bntec->bntd", expert_out, combine).astype(xg.dtype)
+
+    if "shared" in p:
+        out = out + _shared_ffn(p["shared"], xg, cfg.ffn_act)
+    out = out.reshape(B, S, d)
+    if "dense" in p:
+        out = out + apply_ffn(p["dense"], x, cfg.ffn_act)
+
+    # load-balance auxiliary loss (Switch-style)
+    me = probs.mean((0, 1, 2))  # [E]
+    ce = jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32).mean((0, 1, 2))
+    aux = (me * ce).sum() * E
+    return out, aux

@@ -1,0 +1,97 @@
+"""Griffin / RecurrentGemma recurrent block: temporal conv + RG-LRU gated
+diagonal linear recurrence, with full-sequence (associative scan) and
+single-step decode paths.
+
+RG-LRU [arXiv:2402.19427]:
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = a^(c * r_t)  with a = sigmoid(Lambda), c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The block is: x -> [gate branch: linear+gelu] ⊙ [linear -> conv1d(w=4) ->
+RG-LRU] -> linear out. The diagonal recurrence runs in log-depth via
+``jax.lax.associative_scan`` (TPU-native replacement for the paper's custom
+Pallas-on-GPU scan).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Array, dense_init, split
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg, dtype=jnp.float32) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    kx, kg, ka, ki, kc, ko, kl = split(key, 7)
+    return {
+        "w_x": dense_init(kx, d, w, dtype=dtype),  # recurrent branch in-proj
+        "w_gate": dense_init(kg, d, w, dtype=dtype),  # multiplicative gate branch
+        "conv_w": (jax.random.normal(kc, (cfg.conv_width, w)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": dense_init(ka, w, w, scale=0.5, dtype=dtype),
+        "b_a": jnp.zeros((w,), dtype),
+        "w_i": dense_init(ki, w, w, scale=0.5, dtype=dtype),
+        "b_i": jnp.zeros((w,), dtype),
+        # Lambda init so that a = sigmoid(Lambda) ~ U(0.9, 0.999)
+        "lam": jnp.asarray(
+            jnp.log(jnp.linspace(0.9, 0.999, w) / (1 - jnp.linspace(0.9, 0.999, w))), dtype
+        ),
+        "w_out": dense_init(ko, w, d, dtype=dtype),
+    }
+
+
+def _rglru_gates(p, u: Array):
+    """u: [..., w] conv output. Returns (log_a, beta*input) per step."""
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", u, p["w_a"]) + p["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", u, p["w_i"]) + p["b_i"])
+    log_a = -_C * r * jax.nn.softplus(p["lam"].astype(jnp.float32))  # log a_t <= 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-9))
+    return a.astype(u.dtype), (beta * i * u.astype(jnp.float32)).astype(u.dtype)
+
+
+def _conv1d(p, x: Array, state: Array | None = None):
+    """Causal depthwise conv, width cw. x: [B,S,w]. state: [B,cw-1,w]."""
+    cw = p["conv_w"].shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # [B, S+cw-1, w]
+    out = sum(xp[:, i : i + x.shape[1]] * p["conv_w"][i] for i in range(cw)) + p["conv_b"]
+    new_state = xp[:, -(cw - 1) :]
+    return out, new_state
+
+
+def rglru_block(p, cfg, x: Array, return_state: bool = False):
+    """Full-sequence Griffin recurrent block. x: [B,S,d] -> [B,S,d]."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"]))
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_x"])
+    u, conv_state = _conv1d(p, u)
+    a, b = _rglru_gates(p, u)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = jnp.einsum("bsw,wd->bsd", h * gate, p["w_out"])
+    if return_state:
+        return out, {"h": h[:, -1].astype(jnp.float32), "conv": conv_state}
+    return out
+
+
+def rglru_decode(p, cfg, x: Array, h_state: Array, conv_state: Array):
+    """Single-step decode. x: [B,1,d]; h_state: [B,w]; conv_state: [B,cw-1,w]."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"]))
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_x"])
+    u, conv_state = _conv1d(p, u, conv_state)
+    a, b = _rglru_gates(p, u)
+    h = a[:, 0].astype(jnp.float32) * h_state + b[:, 0].astype(jnp.float32)
+    out = jnp.einsum("bsw,wd->bsd", h[:, None].astype(gate.dtype) * gate, p["w_out"])
+    return out, h, conv_state

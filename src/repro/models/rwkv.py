@@ -1,0 +1,247 @@
+"""RWKV-6 "Finch" [arXiv:2404.05892]: attention-free time-mix with
+data-dependent decay (wkv6) + channel-mix, with chunked full-sequence and
+single-step decode paths.
+
+Time-mix recurrence per head (state S: [dk, dv]):
+    S_t = diag(w_t) @ S_{t-1} + k_t^T v_t
+    o_t = r_t @ (S_{t-1} + diag(u) k_t^T v_t)
+
+``w_t`` is data-dependent (ddlerp + LoRA). The full-sequence path uses the
+chunked linear-attention formulation (log-space within-chunk decays; chunk
+state carried by a lax.scan over chunks) — the same algorithm the Pallas
+kernel in ``repro/kernels/wkv`` implements for TPU; that kernel is validated
+against :func:`wkv6_chunked` and the naive :func:`wkv6_scan` oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Array, dense_init, split
+
+LORA_R = 32
+CHUNK = 32
+
+
+def init_rwkv_block(key, cfg, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    ks = split(key, 12)
+    mix = lambda k: (jax.random.uniform(k, (5, d)) * 0.5 + 0.25).astype(dtype)
+    return {
+        # time-mix
+        "mu": mix(ks[0]),  # ddlerp base mixes for r,k,v,w,g
+        "ddlerp_w1": dense_init(ks[1], d, 5 * LORA_R, dtype=dtype),
+        "ddlerp_w2": _stack5(ks[2], LORA_R, d, dtype),
+        "w_r": dense_init(ks[3], d, d, dtype=dtype),
+        "w_k": dense_init(ks[4], d, d, dtype=dtype),
+        "w_v": dense_init(ks[5], d, d, dtype=dtype),
+        "w_g": dense_init(ks[6], d, d, dtype=dtype),
+        "w_o": dense_init(ks[7], d, d, dtype=dtype),
+        "decay_base": jnp.full((d,), -6.0, dtype),  # w = exp(-exp(.)) ~ 0.9975
+        "decay_w1": dense_init(ks[8], d, LORA_R * 2, dtype=dtype),
+        "decay_w2": dense_init(ks[9], LORA_R * 2, d, dtype=dtype),
+        "bonus_u": (jax.random.normal(ks[10], (H, hd)) * 0.1).astype(dtype),
+        "ln_x_scale": jnp.ones((d,), dtype),  # per-head group norm on output
+        # channel-mix
+        "cm_mu": (jax.random.uniform(ks[11], (2, d)) * 0.5 + 0.25).astype(dtype),
+        "cm_k": dense_init(ks[0], d, cfg.d_ff, dtype=dtype),
+        "cm_v": dense_init(ks[1], cfg.d_ff, d, dtype=dtype),
+        "cm_r": dense_init(ks[2], d, d, dtype=dtype),
+    }
+
+
+def _stack5(key, r, d, dtype):
+    return (jax.random.normal(key, (5, r, d)) * (r ** -0.5)).astype(dtype)
+
+
+# -- wkv6 core ------------------------------------------------------------------
+def wkv6_scan(r, k, v, w, u, S0=None, return_state: bool = False):
+    """Naive stepwise oracle. r,k,w: [B,T,H,K]; v: [B,T,H,V]; u: [H,K].
+    Returns o: [B,T,H,V] (and the final [B,H,K,V] state if requested)."""
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    if S0 is None:
+        S0 = jnp.zeros((B, H, K, V), jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs  # [B,H,K],[B,H,K],[B,H,V],[B,H,K]
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        o = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, o
+
+    xs = tuple(jnp.moveaxis(x.astype(jnp.float32), 1, 0) for x in (r, k, v, w))
+    S, o = jax.lax.scan(step, S0, xs)
+    o = jnp.moveaxis(o, 0, 1).astype(r.dtype)
+    return (o, S) if return_state else o
+
+
+def wkv6_chunked(r, k, v, w, u, chunk: int = CHUNK, return_state: bool = False):
+    """Chunked (block-parallel) wkv6 — the TPU-friendly formulation.
+
+    Within a chunk, decays are applied in log space (log w <= 0 so all
+    relative decay factors are <= 1); across chunks a [B,H,K,V] state is
+    carried with a scan. Matches :func:`wkv6_scan` to fp32 tolerance.
+    """
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    if T % chunk:
+        pad = chunk - T % chunk
+        zf = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, w = zf(r), zf(k), zf(v), jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    Tp = r.shape[1]
+    n = Tp // chunk
+    resh = lambda x: x.astype(jnp.float32).reshape(B, n, chunk, H, x.shape[-1]).transpose(1, 0, 3, 2, 4)
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(w)  # [n,B,H,C,*]
+
+    logw = jnp.log(jnp.clip(wc, 1e-12))  # [n,B,H,C,K]
+    cum = jnp.cumsum(logw, axis=3)  # inclusive cumsum over chunk positions
+
+    # within-chunk relative decay A[t,s] = exp(cum[t-1] - cum[s]) for s < t
+    def run_chunk(S, xs):
+        rt, kt, vt, cumt, logwt = xs
+        cprev = cumt - logwt  # cum[t-1] (exclusive cumsum); <= 0
+        total = cumt[:, :, -1:, :]  # [B,H,1,K] full-chunk log decay
+        q_state = rt * jnp.exp(cprev)  # decay from chunk start; exponent <= 0
+        k_end = kt * jnp.exp(total - cumt)  # decay to chunk end; exponent <= 0
+        # inter-chunk: o_inter[t] = q_state[t] @ S
+        o_inter = jnp.einsum("bhck,bhkv->bhcv", q_state, S)
+        # intra-chunk (strictly lower triangular): the relative decay
+        # exp(cprev[t] - cum[s]) is computed PAIRWISE per k-channel — the
+        # exponent is always <= 0 for s < t, so this is overflow-safe for
+        # arbitrarily strong data-dependent decays (two-factor forms are
+        # not; see kernels/wkv notes). Cost: a [B,H,C,C,K] temp — why the
+        # default chunk is modest.
+        delta = cprev[:, :, :, None, :] - cumt[:, :, None, :, :]  # [B,H,C,C,K]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), -1)
+        pair = jnp.exp(jnp.where(tri[None, None, :, :, None], delta, -jnp.inf))
+        scores = jnp.einsum("bhck,bhdk,bhcdk->bhcd", rt, kt, pair)
+        o_intra = jnp.einsum("bhcd,bhdv->bhcv", scores, vt)
+        # current-token bonus: (r_t ⊙ u ⊙ k_t)·v_t
+        bonus = jnp.einsum("bhck,bhck->bhc", rt * u[None, :, None, :], kt)
+        o_bonus = bonus[..., None] * vt
+        # state update: S' = exp(total) * S + sum_s exp(total - cum[s]) k_s^T v_s
+        S = jnp.exp(total[:, :, 0, :])[..., None] * S + jnp.einsum(
+            "bhck,bhcv->bhkv", k_end, vt
+        )
+        return S, o_inter + o_intra + o_bonus
+
+    S0 = jnp.zeros((B, H, K, V), jnp.float32)
+    S, o = jax.lax.scan(run_chunk, S0, (rc, kc, vc, cum, logw))
+    o = o.transpose(1, 0, 3, 2, 4).reshape(B, Tp, H, V)[:, :T]
+    o = o.astype(r.dtype)
+    return (o, S) if return_state else o
+
+
+# -- block application --------------------------------------------------------
+def _ddlerp(p, x: Array, x_prev: Array):
+    """Data-dependent token-shift interpolation producing r,k,v,w,g inputs.
+
+    RWKV6 ddlerp: z_i = x + delta * (mu_i + lora_i(x + delta*mu_base))."""
+    delta = x_prev - x
+    mix = x + delta * p["mu"][0]
+    lora = jnp.einsum("bsd,dr->bsr", jnp.tanh(mix), p["ddlerp_w1"]).reshape(
+        *x.shape[:-1], 5, LORA_R
+    )
+    outs = []
+    for i in range(5):
+        adj = jnp.einsum("bsr,rd->bsd", lora[..., i, :], p["ddlerp_w2"][i])
+        outs.append(x + delta * (p["mu"][i] + adj))
+    return outs  # r,k,v,w,g pre-projections
+
+
+def _time_mix(p, cfg, x: Array, x_prev: Array, wkv_fn, return_state: bool = False):
+    B, S, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev)
+    r = jnp.einsum("bsd,de->bse", xr, p["w_r"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,de->bse", xk, p["w_k"]).reshape(B, S, H, hd)
+    v = jnp.einsum("bsd,de->bse", xv, p["w_v"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["w_g"]))
+    dw = jnp.einsum(
+        "bsd,dr->bsr", jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["decay_w1"])), p["decay_w2"]
+    )
+    logit = p["decay_base"] + dw
+    w = jnp.exp(-jnp.exp(logit.astype(jnp.float32)))  # in (0,1)
+    out = wkv_fn(r, k, v, w.reshape(B, S, H, hd), p["bonus_u"], return_state)
+    o, Sfinal = out if return_state else (out, None)
+    o = _group_norm(o.reshape(B, S, d), H, p["ln_x_scale"])
+    o = jnp.einsum("bsd,de->bse", o * g, p["w_o"])
+    return (o, Sfinal) if return_state else o
+
+
+def _group_norm(x: Array, groups: int, scale: Array, eps: float = 1e-5) -> Array:
+    B, S, d = x.shape
+    xg = x.reshape(B, S, groups, d // groups).astype(jnp.float32)
+    mu = xg.mean(-1, keepdims=True)
+    var = ((xg - mu) ** 2).mean(-1, keepdims=True)
+    y = ((xg - mu) * jax.lax.rsqrt(var + eps)).reshape(B, S, d)
+    return (y * scale).astype(x.dtype)
+
+
+def _channel_mix(p, x: Array, x_prev: Array):
+    xk = x + (x_prev - x) * p["cm_mu"][0]
+    xr = x + (x_prev - x) * p["cm_mu"][1]
+    kk = jnp.einsum("bsd,df->bsf", xk, p["cm_k"])
+    kk = jnp.square(jax.nn.relu(kk))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cm_r"]))
+    return rr * jnp.einsum("bsf,fd->bsd", kk, p["cm_v"])
+
+
+def _shift(x: Array) -> Array:
+    """x_prev[t] = x[t-1] (zeros at t=0)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def rwkv_block(p, cfg, x_tm_in: Array, x_cm_in: Array, chunked: bool = True,
+               return_state: bool = False):
+    """Full-sequence RWKV block pieces: returns (tm_out, cm_out[, state])
+    given the *normalized* inputs to each sub-layer (residual wiring in
+    blocks.py). ``state`` matches the rwkv_decode state pytree."""
+    wkv_fn = (lambda r, k, v, w, u, rs: wkv6_chunked(r, k, v, w, u, return_state=rs)) if chunked else (
+        lambda r, k, v, w, u, rs: wkv6_scan(r, k, v, w, u, return_state=rs)
+    )
+    cm = _channel_mix(p, x_cm_in, _shift(x_cm_in))
+    if not return_state:
+        tm = _time_mix(p, cfg, x_tm_in, _shift(x_tm_in), wkv_fn)
+        return tm, cm
+    tm, S = _time_mix(p, cfg, x_tm_in, _shift(x_tm_in), wkv_fn, return_state=True)
+    state = {"S": S, "tm_prev": x_tm_in[:, -1], "cm_prev": x_cm_in[:, -1]}
+    return tm, cm, state
+
+
+# -- decode ---------------------------------------------------------------------
+def rwkv_decode(p, cfg, x_tm_in: Array, x_cm_in: Array, state: dict):
+    """Single-token step. state: {"S":[B,H,K,V] fp32, "tm_prev":[B,d],
+    "cm_prev":[B,d]}. Inputs are [B,1,d] normalized sub-layer inputs."""
+    B, _, d = x_tm_in.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    tm_prev = state["tm_prev"][:, None, :]
+    xr, xk, xv, xw, xg = _ddlerp(p, x_tm_in, tm_prev)
+    r = jnp.einsum("bsd,de->bse", xr, p["w_r"]).reshape(B, H, hd)
+    k = jnp.einsum("bsd,de->bse", xk, p["w_k"]).reshape(B, H, hd)
+    v = jnp.einsum("bsd,de->bse", xv, p["w_v"]).reshape(B, H, hd)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["w_g"]))[:, 0]
+    dw = jnp.einsum("bsd,dr->bsr", jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["decay_w1"])), p["decay_w2"])
+    w = jnp.exp(-jnp.exp((p["decay_base"] + dw).astype(jnp.float32))).reshape(B, H, hd)
+    S = state["S"]
+    kv = jnp.einsum("bhk,bhv->bhkv", k.astype(jnp.float32), v.astype(jnp.float32))
+    o = jnp.einsum("bhk,bhkv->bhv", r.astype(jnp.float32), S + p["bonus_u"].astype(jnp.float32)[None, :, :, None] * kv)
+    S = w[..., None] * S + kv
+    o = _group_norm(o.reshape(B, 1, d).astype(x_tm_in.dtype), H, p["ln_x_scale"])[:, 0]
+    tm_out = jnp.einsum("bd,de->be", o * g, p["w_o"])[:, None]
+
+    cm_prev = state["cm_prev"][:, None, :]
+    xk2 = x_cm_in + (cm_prev - x_cm_in) * p["cm_mu"][0]
+    xr2 = x_cm_in + (cm_prev - x_cm_in) * p["cm_mu"][1]
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk2, p["cm_k"])))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr2, p["cm_r"]))
+    cm_out = rr * jnp.einsum("bsf,fd->bsd", kk, p["cm_v"])
+
+    new_state = {"S": S, "tm_prev": x_tm_in[:, 0], "cm_prev": x_cm_in[:, 0]}
+    return tm_out, cm_out, new_state

@@ -1,0 +1,276 @@
+"""The unified model: decoder-only LMs (dense / MoE / MLA / hybrid / ssm),
+encoder-decoder (seamless), and stub-fronted VLM/audio — one class, driven
+entirely by :class:`repro.configs.ModelConfig`.
+
+Public surface used by training, serving and the dry-run:
+
+* ``init(key)`` — parameter pytree (segment-stacked; see blocks.py).
+* ``loss(params, batch)`` — next-token CE (+ MoE aux), for train_step.
+* ``prefill(params, batch)`` — full-sequence forward building decode caches.
+* ``decode_step(params, caches, tokens, pos)`` — one token for the batch.
+* ``init_cache(batch, max_seq)`` — decode-state pytree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, Segment
+
+from .attention import PhysPlan, encode_kv
+from .blocks import (
+    init_segment,
+    init_segment_cache,
+    scan_segment,
+    scan_segment_decode,
+)
+from .common import Array, embed_tokens, init_embed, init_norm, apply_norm, lm_logits
+
+
+@dataclasses.dataclass
+class LM:
+    cfg: ModelConfig
+    plan: PhysPlan | None = None
+    dtype: object = jnp.float32
+    remat: bool = True
+    rwkv_chunked: bool = True
+
+    def __post_init__(self):
+        if self.plan is None:
+            self.plan = PhysPlan.make(self.cfg, tp=1)
+        self.segments = self.cfg.layer_plan()
+        self.enc_segments = self.cfg.encoder_plan()
+
+    # -- params ------------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, 3 + len(self.segments) + len(self.enc_segments))
+        params = {
+            "embed": init_embed(keys[0], cfg, self.dtype),
+            "final_norm": init_norm(cfg, self.dtype),
+            "segments": [
+                init_segment(k, cfg, seg, self.plan, self.dtype)
+                for k, seg in zip(keys[3:], self.segments)
+            ],
+        }
+        if self.enc_segments:
+            params["enc_segments"] = [
+                init_segment(k, cfg, seg, self.plan, self.dtype)
+                for k, seg in zip(keys[3 + len(self.segments):], self.enc_segments)
+            ]
+            params["enc_norm"] = init_norm(cfg, self.dtype)
+        return params
+
+    def abstract_params(self, seed: int = 0):
+        return jax.eval_shape(self.init, jax.random.key(seed))
+
+    # -- helpers ------------------------------------------------------------
+    def _embed_in(self, params, tokens: Array, frontend: Array | None) -> tuple[Array, Array]:
+        """Token (+frontend stub) embedding -> (x [B,S,d], positions [B,S])."""
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens)
+        if cfg.frontend == "vision" and frontend is not None:
+            x = jnp.concatenate([frontend.astype(x.dtype), x], axis=1)
+        if cfg.embed_scale:  # gemma-style embedding scaling
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        B, S = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        return x, positions
+
+    def _encode(self, params, enc_embeds: Array) -> Array:
+        """Encoder stack over precomputed frame embeddings (audio stub)."""
+        x = enc_embeds.astype(self.dtype)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        for seg_p, seg in zip(params["enc_segments"], self.enc_segments):
+            x, _ = scan_segment(seg_p, self.cfg, seg, x, positions, remat=self.remat)
+        return apply_norm(params["enc_norm"], x)
+
+    def _backbone(self, params, x, positions, enc_out=None):
+        aux = jnp.zeros((), jnp.float32)
+        for seg_p, seg in zip(params["segments"], self.segments):
+            x, aux_i = scan_segment(
+                seg_p, self.cfg, seg, x, positions, remat=self.remat,
+                enc_out=enc_out, rwkv_chunked=self.rwkv_chunked,
+            )
+            aux = aux + aux_i
+        return apply_norm(params["final_norm"], x), aux
+
+    # -- training -----------------------------------------------------------
+    def loss(self, params, batch: dict) -> tuple[Array, dict]:
+        """batch: tokens [B,S] int32, targets [B,S] int32 (-100 = masked),
+        optional 'frontend' (vision: [B,N_img,d]; audio: [B,S_enc,d])."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        targets = batch["targets"]
+        frontend = batch.get("frontend")
+        enc_out = None
+        if cfg.is_encdec:
+            enc_hidden = self._encode(params, frontend)
+            enc_out = self._enc_kv(params, enc_hidden)
+        x, positions = self._embed_in(params, tokens, frontend if cfg.frontend == "vision" else None)
+        x, aux = self._backbone(params, x, positions, enc_out=enc_out)
+        if cfg.frontend == "vision" and frontend is not None:
+            x = x[:, frontend.shape[1]:]  # loss only on text positions
+        ce = _chunked_ce(params["embed"], cfg, x, targets)
+        total = ce + 0.01 * aux
+        return total, {"ce": ce, "aux": aux}
+
+    def _enc_kv(self, params, enc_hidden):
+        """Cross-attention enc_out is re-projected per decoder layer inside
+        the scan; we pass the hidden states and let blocks compute K/V lazily
+        via the layer's xattn params (encode_kv)."""
+        return enc_hidden  # blocks.cross_attention computes k,v from this
+
+    # -- serving --------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int, enc_len: int | None = None,
+                   cache_dtype=None) -> list:
+        cd = cache_dtype or self.dtype
+        enc_len = enc_len or max_seq
+        return [
+            init_segment_cache(self.cfg, seg, self.plan, batch, max_seq, enc_len, cd)
+            for seg in self.segments
+        ]
+
+    def prefill(self, params, batch: dict, max_seq: int | None = None):
+        """Run the full prompt, returning (last-token logits [B,V], caches).
+
+        The baseline prefill recomputes the sequence and then scatters K/V
+        into the preallocated cache; collect_kv fusion is a perf iteration
+        (see EXPERIMENTS.md §Perf)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        frontend = batch.get("frontend")
+        B, S = tokens.shape[0], tokens.shape[1]
+        enc_out = None
+        if cfg.is_encdec:
+            enc_hidden = self._encode(params, frontend)
+            enc_out = enc_hidden
+        x, positions = self._embed_in(params, tokens, frontend if cfg.frontend == "vision" else None)
+        S_total = x.shape[1]
+        max_seq = max_seq or S_total
+        caches = []
+        aux = jnp.zeros((), jnp.float32)
+        for seg_p, seg in zip(params["segments"], self.segments):
+            x, seg_cache, aux_i = _prefill_segment(
+                seg_p, cfg, seg, self.plan, x, positions, max_seq,
+                enc_out=enc_out, dtype=self.dtype, rwkv_chunked=self.rwkv_chunked,
+            )
+            caches.append(seg_cache)
+            aux += aux_i
+        x = apply_norm(params["final_norm"], x)
+        logits = lm_logits(params["embed"], x[:, -1:], cfg)[:, 0]
+        return logits, caches
+
+    def decode_step(self, params, caches, tokens: Array, pos):
+        """tokens: [B] int32; pos: scalar int32. Returns (logits [B,V], caches)."""
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens[:, None])
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        new_caches = []
+        for seg_p, seg_c, seg in zip(params["segments"], caches, self.segments):
+            x, nc = scan_segment_decode(seg_p, seg_c, cfg, seg, x, pos)
+            new_caches.append(nc)
+        x = apply_norm(params["final_norm"], x)
+        logits = lm_logits(params["embed"], x, cfg)[:, 0]
+        return logits, new_caches
+
+
+# -----------------------------------------------------------------------------
+def _chunked_ce(embed_params, cfg, x: Array, targets: Array, chunk: int = 512):
+    """Next-token CE computed in sequence chunks under remat: never
+    materializes the full [B,S,V] logits (f32 copies of which dominate
+    train-cell HBM otherwise — EXPERIMENTS.md §Dry-run). The vocab dim
+    stays sharded (one-hot contraction instead of take_along_axis)."""
+    B, S, d = x.shape
+    nc = max(1, S // chunk)
+    while S % nc:
+        nc -= 1
+    C = S // nc
+    xc = x.reshape(B, nc, C, d).swapaxes(0, 1)  # [nc,B,C,d]
+    tc = targets.reshape(B, nc, C).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_loss(carry, xs):
+        tot, cnt = carry
+        xi, ti = xs
+        logits = lm_logits(embed_params, xi, cfg)
+        mask = ti >= 0
+        tgt = jnp.where(mask, ti, 0)
+        logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        onehot = jax.nn.one_hot(tgt, logits.shape[-1], dtype=logits.dtype)
+        gold = jnp.einsum("bsv,bsv->bs", logits, onehot).astype(jnp.float32)
+        tot = tot + jnp.where(mask, logz - gold, 0.0).sum()
+        cnt = cnt + mask.sum()
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        chunk_loss, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (xc, tc)
+    )
+    return tot / jnp.clip(cnt, 1)
+
+
+def _prefill_segment(seg_p, cfg, seg, plan, x, positions, max_seq, *, enc_out,
+                     dtype, rwkv_chunked):
+    """Full-sequence pass that also populates the decode cache for the
+    segment. KV collection runs outside lax.scan (python loop over repeat
+    via indexing) so each layer's K/V can be written into its cache slot —
+    scan xs/ys carry them instead."""
+    from .blocks import apply_superblock, init_sublayer_cache
+    import jax
+
+    S = x.shape[1]
+    B = x.shape[0]
+
+    def body(carry, layer_p):
+        xc, aux = carry
+        xn, aux_i, kvs = apply_superblock(
+            layer_p, cfg, seg.kinds, xc, positions, enc_out=enc_out,
+            collect_kv=True, rwkv_chunked=rwkv_chunked,
+        )
+        return (xn, aux + aux_i), kvs
+
+    (x, aux), kv_stacks = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), seg_p)
+
+    # Build cache pytree and write the collected per-layer payloads.
+    enc_len = enc_out.shape[1] if enc_out is not None else max_seq
+    cache = init_segment_cache(cfg, seg, plan, B, max_seq, enc_len, dtype)
+
+    def write_seq(dst, src):
+        """Write [R,B,S,...] prefix into [R,B,max_seq,...] at position 0."""
+        src = src.astype(dst.dtype)
+        return jax.lax.dynamic_update_slice(dst, src, (0,) * src.ndim)
+
+    for i, kind in enumerate(seg.kinds):
+        key = str(i)
+        if key not in cache:
+            continue
+        c = dict(cache[key])
+        payload = kv_stacks[key]
+        if kind in ("rwkv", "rglru"):
+            c = jax.tree.map(lambda dst, s: s.astype(dst.dtype), c, payload)
+        elif kind in ("mla_dense", "mla_moe"):
+            ckv, krope = payload
+            c["c_kv"] = write_seq(c["c_kv"], ckv)
+            c["k_rope"] = write_seq(c["k_rope"], krope)
+        else:  # dense / dense_local / moe / dec
+            k, v = payload[0], payload[1]
+            if kind == "dense_local" and S >= c["k"].shape[2]:
+                W = c["k"].shape[2]
+                # ring cache: token at absolute position p sits at p % W
+                shift = S % W
+                c["k"] = jnp.roll(k[:, :, -W:], shift, axis=2).astype(c["k"].dtype)
+                c["v"] = jnp.roll(v[:, :, -W:], shift, axis=2).astype(c["v"].dtype)
+            else:
+                c["k"] = write_seq(c["k"], k)
+                c["v"] = write_seq(c["v"], v)
+            if kind == "dec":
+                c["xk"] = payload[2].astype(c["xk"].dtype)
+                c["xv"] = payload[3].astype(c["xv"].dtype)
+        cache[key] = c
+    return x, cache, aux

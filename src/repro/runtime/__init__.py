@@ -1,0 +1,3 @@
+from .ft import FailureInjector, RestartSupervisor, StragglerDetector
+
+__all__ = ["FailureInjector", "RestartSupervisor", "StragglerDetector"]

@@ -1,0 +1,106 @@
+"""Fault-tolerance runtime: restart supervision and straggler mitigation.
+
+* :class:`RestartSupervisor` — wraps the train loop; on a (real or injected)
+  failure it restores the latest checkpoint and resumes, up to a restart
+  budget. Preemption drills use :class:`FailureInjector`.
+* :class:`StragglerDetector` — per-step wall-time tracker flagging hosts
+  whose step times exceed a robust threshold (median + k·MAD over a sliding
+  window); at pod scale the launcher maps flagged hosts to hot spares and
+  re-forms the mesh via elastic restore (checkpoint/checkpointer.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from collections import deque
+from typing import Callable
+
+__all__ = ["FailureInjector", "RestartSupervisor", "StragglerDetector"]
+
+
+class FailureInjector:
+    """Deterministic failure schedule for preemption/crash drills."""
+
+    def __init__(self, fail_at_steps: tuple[int, ...] = ()):
+        self.fail_at = set(fail_at_steps)
+        self.injected: list[int] = []
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at:
+            self.fail_at.discard(step)
+            self.injected.append(step)
+            raise RuntimeError(f"injected failure at step {step}")
+
+
+@dataclasses.dataclass
+class RestartSupervisor:
+    """Runs ``body(start_step) -> last_step`` under restart-on-failure.
+
+    ``body`` must checkpoint internally; on failure the supervisor calls
+    ``restore() -> start_step`` and re-enters. Gives up after
+    ``max_restarts``."""
+
+    restore: Callable[[], int]
+    max_restarts: int = 3
+    backoff_s: float = 0.0
+
+    def run(self, body: Callable[[int], int], start_step: int = 0) -> dict:
+        restarts = 0
+        failures: list[str] = []
+        step = start_step
+        while True:
+            try:
+                last = body(step)
+                return {"last_step": last, "restarts": restarts, "failures": failures}
+            except Exception as e:  # noqa: BLE001
+                failures.append(f"step~{step}: {type(e).__name__}: {e}")
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise RuntimeError(
+                        f"exceeded restart budget ({self.max_restarts}); failures: {failures}"
+                    ) from e
+                if self.backoff_s:
+                    time.sleep(self.backoff_s)
+                step = self.restore()
+
+
+class StragglerDetector:
+    """Flags slow participants from per-step timings (median + k*MAD)."""
+
+    def __init__(self, window: int = 50, k: float = 5.0, min_samples: int = 10):
+        self.window = window
+        self.k = k
+        self.min_samples = min_samples
+        self.times: dict[str, deque] = {}
+
+    def record(self, host: str, step_seconds: float) -> None:
+        self.times.setdefault(host, deque(maxlen=self.window)).append(step_seconds)
+
+    def stragglers(self) -> list[str]:
+        medians = {
+            h: statistics.median(ts)
+            for h, ts in self.times.items()
+            if len(ts) >= self.min_samples
+        }
+        if len(medians) < 2:
+            return []
+        vals = sorted(medians.values())
+        med = statistics.median(vals)
+        mad = statistics.median([abs(v - med) for v in vals]) or 1e-9
+        return [h for h, v in medians.items() if v > med + self.k * mad]
+
+    class StepTimer:
+        def __init__(self, detector: "StragglerDetector", host: str):
+            self.detector, self.host = detector, host
+
+        def __enter__(self):
+            self._t0 = time.perf_counter()
+            return self
+
+        def __exit__(self, *exc):
+            self.detector.record(self.host, time.perf_counter() - self._t0)
+
+    def timing(self, host: str) -> "StragglerDetector.StepTimer":
+        return self.StepTimer(self, host)

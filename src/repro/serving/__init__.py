@@ -1,0 +1,20 @@
+"""Serving substrate: paged KV bookkeeping, the paper's size-aware prefix
+cache, continuous-batching scheduler, and the (CPU-scale) engine."""
+
+from .engine import Engine, EngineConfig
+from .kvcache import BlockPool, block_hashes
+from .prefix_cache import PrefixCache, PrefixCacheConfig, kv_bytes_per_token
+from .scheduler import Request, Scheduler, SchedulerConfig
+
+__all__ = [
+    "Engine",
+    "EngineConfig",
+    "BlockPool",
+    "block_hashes",
+    "PrefixCache",
+    "PrefixCacheConfig",
+    "kv_bytes_per_token",
+    "Request",
+    "Scheduler",
+    "SchedulerConfig",
+]

@@ -1,0 +1,170 @@
+"""Serving engine: model + scheduler + size-aware prefix cache.
+
+The engine demonstrates (and tests) the paper's policy in its serving role:
+on each request it looks up the longest cached prefix, prefills only the
+suffix, and offers the finished prompt back to the cache, where the
+size-aware W-TinyLFU admission decides residency.
+
+This is the CPU-scale engine (B=1 tensor path, correctness-oriented); the
+TPU-scale batched path is exercised by the dry-run's serve_step lowering.
+KV payloads are stored *sliced to the prefix length* and re-padded on use,
+so cache byte accounting matches tensor reality.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .prefix_cache import PrefixCache, PrefixCacheConfig, kv_bytes_per_token
+from .scheduler import Request, Scheduler, SchedulerConfig
+
+__all__ = ["Engine", "EngineConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_seq: int = 256
+    cache_capacity_bytes: int = 1 << 22
+    cache_policy: str = "wtlfu-av"
+    block_size: int = 8
+    greedy: bool = True
+
+
+class Engine:
+    def __init__(self, model, params, cfg: EngineConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        bpt = kv_bytes_per_token(model.cfg, dtype_bytes=4 if model.dtype == jnp.float32 else 2)
+        self.prefix_cache = PrefixCache(
+            PrefixCacheConfig(
+                capacity_bytes=cfg.cache_capacity_bytes,
+                block_size=cfg.block_size,
+                bytes_per_token=bpt,
+                policy=cfg.cache_policy,
+            )
+        )
+        self.scheduler = Scheduler(SchedulerConfig())
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, max_seq=cfg.max_seq),
+            static_argnames=(),
+        )
+        self._decode = jax.jit(model.decode_step)
+        self._rid = 0
+        self.prefill_tokens_computed = 0
+        self.prefill_tokens_saved = 0
+
+    # -- cache payload helpers ------------------------------------------------
+    def _slice_caches(self, caches, n_tokens: int):
+        """Slice dense caches to the first n_tokens (for storage)."""
+        def f(path, leaf):
+            name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+            if name in ("k", "v", "c_kv", "k_rope", "xk", "xv") and leaf.ndim >= 4:
+                return leaf[:, :, :n_tokens]
+            return leaf
+        return [jax.tree_util.tree_map_with_path(f, c) for c in caches]
+
+    def _pad_caches(self, caches, n_tokens: int):
+        """Re-pad stored caches to max_seq for decoding."""
+        S = self.cfg.max_seq
+
+        def f(path, leaf):
+            name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+            if name in ("k", "v", "c_kv", "k_rope") and leaf.ndim >= 4 and leaf.shape[2] == n_tokens:
+                pad = [(0, 0)] * leaf.ndim
+                pad[2] = (0, S - n_tokens)
+                return jnp.pad(leaf, pad)
+            return leaf
+        return [jax.tree_util.tree_map_with_path(f, c) for c in caches]
+
+    # -- generation -------------------------------------------------------------
+    def _payload_usable(self, prompt_len: int, full_blocks: int) -> bool:
+        """Recurrent state is not position-sliceable: only block-aligned
+        prompts store usable payloads for ssm/hybrid archs; windowed
+        attention payloads must fit inside the window (ring not yet rolled)."""
+        cfg = self.model.cfg
+        kinds = {k for seg in cfg.layer_plan() for k in seg.kinds}
+        if kinds & {"rwkv", "rglru"} and full_blocks != prompt_len:
+            return False
+        if "dense_local" in kinds and prompt_len > cfg.local_window:
+            return False
+        return True
+
+    def _run_request(self, prompt: list[int], max_new_tokens: int) -> dict:
+        model, cfg = self.model, self.cfg
+        prompt = list(prompt)
+        cached_tokens, entry = self.prefix_cache.lookup(prompt)
+        # a fully-cached prompt still needs the last token's logits
+        cached_tokens = min(cached_tokens, len(prompt) - 1)
+        if cached_tokens and entry is not None and entry.payload is not None:
+            caches = self._pad_caches(entry.payload, cached_tokens)
+            logits = None
+            pos = cached_tokens
+            # extend through remaining prompt tokens
+            for i in range(cached_tokens, len(prompt)):
+                tok = jnp.asarray([prompt[i]], jnp.int32)
+                logits, caches = self._decode(self.params, caches, tok, jnp.int32(i))
+                pos = i + 1
+            self.prefill_tokens_computed += len(prompt) - cached_tokens
+            self.prefill_tokens_saved += cached_tokens
+        else:
+            cached_tokens = 0
+            batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
+            logits, caches = self._prefill(self.params, batch)
+            logits = logits[:1]
+            pos = len(prompt)
+            self.prefill_tokens_computed += len(prompt)
+
+        # offer the *prompt* back to the cache (payload sliced to prompt)
+        full_blocks = (len(prompt) // cfg.block_size) * cfg.block_size
+        if full_blocks > 0:
+            if self._payload_usable(len(prompt), full_blocks):
+                payload = self._slice_caches(caches, full_blocks)
+            else:
+                payload = None  # entry still participates in admission
+            self.prefix_cache.offer(prompt[:full_blocks], payload=payload)
+
+        out = []
+        tok = int(jnp.argmax(logits[0, : model.cfg.vocab_size])) if logits is not None else 0
+        out.append(tok)
+        for _ in range(max_new_tokens - 1):
+            t = jnp.asarray([out[-1]], jnp.int32)
+            logits, caches = self._decode(self.params, caches, t, jnp.int32(pos))
+            pos += 1
+            out.append(int(jnp.argmax(logits[0, : model.cfg.vocab_size])))
+        return {"tokens": out, "cached_tokens": cached_tokens}
+
+    def generate(self, prompts: list[list[int]], max_new_tokens: int = 8) -> list[dict]:
+        return [self._run_request(p, max_new_tokens) for p in prompts]
+
+    def serve(self, prompts: list[list[int]], max_new_tokens: int = 8) -> list[dict]:
+        """Scheduler-driven serving: continuous-batching bookkeeping with
+        the (B=1 tensor) execution path. Returns results in rid order."""
+        for p in prompts:
+            self.scheduler.submit(Request(self._rid, list(p), max_new_tokens))
+            self._rid += 1
+        results: dict[int, dict] = {}
+        while self.scheduler.has_work:
+            to_prefill, _ = self.scheduler.schedule()
+            if not to_prefill:
+                break  # B=1 engine: decode happens inside _run_request
+            for req in to_prefill:
+                r = self._run_request(req.prompt, req.max_new_tokens)
+                req.cached_tokens = r["cached_tokens"]
+                self.scheduler.on_prefilled(req)
+                for t in r["tokens"]:
+                    self.scheduler.on_token(req, t)
+                results[req.rid] = r
+        return [results[i] for i in sorted(results)]
+
+    def stats(self) -> dict:
+        s = self.prefix_cache.stats()
+        s["prefill_tokens_computed"] = self.prefill_tokens_computed
+        s["prefill_tokens_saved"] = self.prefill_tokens_saved
+        total = self.prefill_tokens_computed + self.prefill_tokens_saved
+        s["prefill_savings_frac"] = round(self.prefill_tokens_saved / total, 5) if total else 0.0
+        return s

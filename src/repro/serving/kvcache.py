@@ -1,0 +1,84 @@
+"""Paged KV-cache block pool: fixed-size token blocks, refcounting, and the
+block-hash chaining used for prefix identity (vLLM-style).
+
+The pool is pure bookkeeping — the actual KV tensors live either in the
+model's dense cache pytrees (CPU engine) or in a preallocated HBM pool
+addressed by block id (TPU deployment); eviction/admission never copies KV
+bytes, which is the "lightweight" property the paper targets (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.sketch import mix64
+
+__all__ = ["BlockPool", "hash_chain", "block_hashes"]
+
+
+def hash_chain(prev: int, tokens: tuple[int, ...]) -> int:
+    h = prev
+    for t in tokens:
+        h = mix64(h * 0x100000001B3 ^ (t + 1))
+    return h
+
+
+def block_hashes(token_ids, block_size: int) -> list[int]:
+    """Rolling hash per full block of tokens (partial tail block excluded)."""
+    out = []
+    h = 0xCBF29CE484222325
+    n_full = len(token_ids) // block_size
+    for b in range(n_full):
+        h = hash_chain(h, tuple(token_ids[b * block_size : (b + 1) * block_size]))
+        out.append(h)
+    return out
+
+
+@dataclasses.dataclass
+class Block:
+    block_id: int
+    refcount: int = 0
+
+
+class BlockPool:
+    """Fixed-capacity block allocator with refcounting."""
+
+    def __init__(self, num_blocks: int):
+        self.num_blocks = num_blocks
+        self.free_list: list[int] = list(range(num_blocks - 1, -1, -1))
+        self.blocks: dict[int, Block] = {}
+
+    @property
+    def num_free(self) -> int:
+        return len(self.free_list)
+
+    @property
+    def num_used(self) -> int:
+        return self.num_blocks - self.num_free
+
+    def alloc(self, n: int = 1) -> list[int] | None:
+        """Allocate n blocks with refcount 1, or None if insufficient."""
+        if len(self.free_list) < n:
+            return None
+        ids = [self.free_list.pop() for _ in range(n)]
+        for bid in ids:
+            self.blocks[bid] = Block(bid, 1)
+        return ids
+
+    def ref(self, block_ids) -> None:
+        for bid in block_ids:
+            self.blocks[bid].refcount += 1
+
+    def unref(self, block_ids) -> None:
+        for bid in block_ids:
+            b = self.blocks[bid]
+            b.refcount -= 1
+            if b.refcount < 0:
+                raise RuntimeError(f"block {bid} refcount underflow")
+            if b.refcount == 0:
+                del self.blocks[bid]
+                self.free_list.append(bid)
+
+    def refcount(self, bid: int) -> int:
+        b = self.blocks.get(bid)
+        return b.refcount if b else 0

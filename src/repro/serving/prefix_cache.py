@@ -1,0 +1,176 @@
+"""Prefix/KV cache with size-aware W-TinyLFU admission — the paper's policy
+as a first-class serving feature (DESIGN.md §2).
+
+Cached objects are *prompt prefixes*: variable-sized (bytes ∝ tokens x
+layers x kv-heads x head-dim — differs per architecture AND per prompt),
+which is exactly the regime where the paper's size-aware admission (AV/QV/
+IV) beats size-oblivious policies. Hit-ratio here ⇒ prefill steps saved;
+token(byte)-hit-ratio ⇒ prefill FLOPs/HBM bytes saved — the serving analogs
+of the paper's two metrics.
+
+Mechanics:
+* identity: rolling block-hash chain over the prompt (kvcache.block_hashes);
+* lookup: longest cached prefix (walk the chain, deepest hash wins);
+* offer: a finished request's prompt becomes a cache *candidate object*
+  whose size is its KV byte footprint; the admission policy (the paper's
+  core loop) decides whether it displaces resident prefixes;
+* physical blocks are refcounted in a BlockPool; policy-level eviction
+  releases block references; shared blocks are freed when unreferenced.
+  Policy byte-accounting is entry-level (conservative under sharing —
+  shared blocks only make the true footprint smaller; documented).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.core import make_policy
+
+from .kvcache import BlockPool, block_hashes
+
+__all__ = ["PrefixCacheConfig", "PrefixCache", "kv_bytes_per_token"]
+
+
+def kv_bytes_per_token(cfg, dtype_bytes: int = 2) -> int:
+    """Per-token KV bytes for an architecture (the object-size model).
+
+    MLA caches latents (kv_lora+rope); attention-free archs have O(1)
+    state (degenerate case — see DESIGN.md §Arch-applicability)."""
+    if cfg.use_mla:
+        per_layer = cfg.kv_lora_rank + cfg.qk_rope_dim
+        n_layers = cfg.num_layers
+        return n_layers * per_layer * dtype_bytes
+    total = 0
+    for seg in cfg.layer_plan():
+        for kind in seg.kinds:
+            if kind in ("dense", "dense_local", "moe", "dec", "enc"):
+                total += seg.repeat * 2 * cfg.num_kv_heads * cfg.resolved_head_dim
+    return max(total, 2 * cfg.d_model) * dtype_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixCacheConfig:
+    capacity_bytes: int
+    block_size: int = 16  # tokens per block
+    bytes_per_token: int = 2 * 32 * 128 * 2  # overridden per arch
+    policy: str = "wtlfu-av"  # any repro.core.make_policy name
+    policy_kwargs: dict | None = None
+
+
+@dataclasses.dataclass
+class _Entry:
+    key: int  # final block hash
+    n_blocks: int
+    hashes: list[int]
+    block_ids: list[int]
+    payload: Any = None  # optional KV tensors (CPU engine)
+
+
+class PrefixCache:
+    def __init__(self, config: PrefixCacheConfig):
+        self.cfg = config
+        block_bytes = config.block_size * config.bytes_per_token
+        num_blocks = max(1, config.capacity_bytes // block_bytes)
+        self.pool = BlockPool(num_blocks)
+        self.block_bytes = block_bytes
+        kw = dict(config.policy_kwargs or {})
+        if "wtlfu" in config.policy and "expected_entries" not in kw:
+            kw["expected_entries"] = max(64, num_blocks)
+        self.policy = make_policy(config.policy, config.capacity_bytes, **kw)
+        self.entries: dict[int, _Entry] = {}
+        self.by_hash: dict[int, list[int]] = {}  # block hash -> entry keys
+        # serving metrics (paper analogs)
+        self.requests = 0
+        self.requests_with_hit = 0
+        self.tokens_requested = 0
+        self.tokens_hit = 0
+
+    # -- internal: keep policy and physical pool in sync -------------------
+    def _sync_evictions(self) -> None:
+        dead = [k for k in self.entries if k not in self.policy]
+        for k in dead:
+            e = self.entries.pop(k)
+            self.pool.unref(e.block_ids)
+            for h in e.hashes:
+                lst = self.by_hash.get(h)
+                if lst is not None:
+                    lst.remove(k)
+                    if not lst:
+                        del self.by_hash[h]
+
+    # -- API -----------------------------------------------------------------
+    def lookup(self, token_ids) -> tuple[int, "_Entry | None"]:
+        """Longest-prefix match. Returns (n_cached_tokens, entry). Counts a
+        policy access for the matched entry (a hit 'touches' the object)."""
+        self.requests += 1
+        self.tokens_requested += len(token_ids)
+        hashes = block_hashes(token_ids, self.cfg.block_size)
+        depth = 0
+        entry = None
+        for i, h in enumerate(hashes):
+            keys = self.by_hash.get(h)
+            if not keys:
+                break
+            depth = i + 1
+            entry = self.entries[keys[0]]
+        if entry is None:
+            return 0, None
+        n_tokens = depth * self.cfg.block_size
+        self.requests_with_hit += 1
+        self.tokens_hit += n_tokens
+        # policy sees an access to the *matched* entry
+        self.policy.access(entry.key, entry.n_blocks * self.block_bytes)
+        self._sync_evictions()
+        return n_tokens, entry
+
+    def offer(self, token_ids, payload: Any = None) -> bool:
+        """Offer a finished prompt as a cache candidate (the paper's
+        admission decision). Returns True if (newly or already) resident."""
+        hashes = block_hashes(token_ids, self.cfg.block_size)
+        if not hashes:
+            return False
+        key = hashes[-1]
+        existing = key in self.entries
+        size = len(hashes) * self.block_bytes
+        self.policy.access(key, size)
+        self._sync_evictions()
+        if key not in self.policy:
+            return False  # rejected by admission
+        if existing:
+            if payload is not None:
+                self.entries[key].payload = payload
+            return True
+        block_ids = self.pool.alloc(len(hashes))
+        if block_ids is None:
+            # physical pool exhausted (policy accounting is entry-level and
+            # conservative; sharing can still exhaust blocks) — give up and
+            # withdraw the entry from the policy by treating it as absent.
+            return False
+        e = _Entry(key, len(hashes), hashes, block_ids, payload)
+        self.entries[key] = e
+        for h in hashes:
+            self.by_hash.setdefault(h, []).append(key)
+        return True
+
+    # -- stats -----------------------------------------------------------------
+    @property
+    def request_hit_ratio(self) -> float:
+        return self.requests_with_hit / self.requests if self.requests else 0.0
+
+    @property
+    def token_hit_ratio(self) -> float:
+        """Fraction of prompt tokens served from cache = prefill compute
+        saved (the byte-hit-ratio analog)."""
+        return self.tokens_hit / self.tokens_requested if self.tokens_requested else 0.0
+
+    def stats(self) -> dict:
+        return {
+            "requests": self.requests,
+            "request_hit_ratio": round(self.request_hit_ratio, 5),
+            "token_hit_ratio": round(self.token_hit_ratio, 5),
+            "entries": len(self.entries),
+            "blocks_used": self.pool.num_used,
+            "blocks_total": self.pool.num_blocks,
+            "policy": self.cfg.policy,
+        }

@@ -1,0 +1,87 @@
+"""Continuous-batching scheduler: waiting queue -> running slots, with a
+prefill token budget per step and preemption when the block pool runs dry.
+
+The scheduler is pure bookkeeping (testable without tensors); the engine
+drives it with real model calls."""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable
+
+__all__ = ["Request", "Scheduler", "SchedulerConfig"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new_tokens: int
+    # runtime state
+    generated: list = dataclasses.field(default_factory=list)
+    cached_tokens: int = 0
+    state: str = "waiting"  # waiting | prefill | decode | done
+    preemptions: int = 0
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    max_running: int = 8
+    prefill_token_budget: int = 8192  # per scheduling step
+
+
+class Scheduler:
+    def __init__(self, cfg: SchedulerConfig):
+        self.cfg = cfg
+        self.waiting: deque[Request] = deque()
+        self.running: list[Request] = []
+        self.finished: list[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def schedule(self) -> tuple[list[Request], list[Request]]:
+        """One scheduling decision: returns (to_prefill, to_decode)."""
+        budget = self.cfg.prefill_token_budget
+        to_prefill = []
+        while (
+            self.waiting
+            and len(self.running) + len(to_prefill) < self.cfg.max_running
+            and budget >= len(self.waiting[0].prompt) - self.waiting[0].cached_tokens
+        ):
+            req = self.waiting.popleft()
+            budget -= len(req.prompt) - req.cached_tokens
+            req.state = "prefill"
+            to_prefill.append(req)
+        to_decode = [r for r in self.running if r.state == "decode"]
+        return to_prefill, to_decode
+
+    def on_prefilled(self, req: Request) -> None:
+        req.state = "decode"
+        self.running.append(req)
+
+    def on_token(self, req: Request, token) -> None:
+        req.generated.append(token)
+        if req.done:
+            req.state = "done"
+            self.running.remove(req)
+            self.finished.append(req)
+
+    def preempt(self, req: Request) -> None:
+        """Evict a running request back to the queue (block-pool pressure);
+        its KV is dropped and will be recomputed (recompute-style preemption)."""
+        req.state = "waiting"
+        req.preemptions += 1
+        req.generated.clear()
+        req.cached_tokens = 0
+        self.running.remove(req)
+        self.waiting.appendleft(req)

@@ -1,0 +1,7 @@
+"""Trace substrate: synthetic generators calibrated to the paper's trace
+classes (Table 1 / Fig. 8) and simple on-disk trace formats."""
+
+from .formats import load_trace, save_trace
+from .synthetic import TRACE_SPECS, make_trace, paper_traces
+
+__all__ = ["make_trace", "paper_traces", "TRACE_SPECS", "load_trace", "save_trace"]

@@ -1,0 +1,32 @@
+"""On-disk trace formats: compressed npz (native) and key,size text files
+(interchange with webcachesim-style simulators)."""
+
+from __future__ import annotations
+
+import pathlib
+
+import numpy as np
+
+from repro.core.cache_api import AccessTrace
+
+__all__ = ["save_trace", "load_trace"]
+
+
+def save_trace(trace: AccessTrace, path: str | pathlib.Path) -> None:
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    np.savez_compressed(path, name=np.array(trace.name), keys=trace.keys, sizes=trace.sizes)
+
+
+def load_trace(path: str | pathlib.Path) -> AccessTrace:
+    path = pathlib.Path(path)
+    if path.suffix in (".txt", ".csv", ".tr"):
+        # webcachesim format: "<timestamp> <key> <size>" or "<key> <size>"
+        rows = np.loadtxt(path, dtype=np.int64, ndmin=2)
+        if rows.shape[1] >= 3:
+            keys, sizes = rows[:, 1], rows[:, 2]
+        else:
+            keys, sizes = rows[:, 0], rows[:, 1]
+        return AccessTrace(path.stem, keys, sizes)
+    data = np.load(path, allow_pickle=False)
+    return AccessTrace(str(data["name"]), data["keys"], data["sizes"])

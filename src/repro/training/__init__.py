@@ -1,0 +1,9 @@
+"""Training substrate: optimizer, step builders, data pipeline, loop."""
+
+from .optimizer import AdamWConfig, apply_updates, init_state, schedule
+from .train_state import build_prefill_step, build_serve_step, build_train_step
+
+__all__ = [
+    "AdamWConfig", "apply_updates", "init_state", "schedule",
+    "build_train_step", "build_serve_step", "build_prefill_step",
+]

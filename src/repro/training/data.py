@@ -1,0 +1,102 @@
+"""Training data pipeline: deterministic synthetic token shards + a local
+shard cache managed by the paper's size-aware admission policy (the second
+cache integration, DESIGN.md §2).
+
+Shards model remote-storage objects of *variable* size (documents packed to
+different lengths / compression ratios). The shard cache avoids re-fetching
+(re-generating) hot shards; admission is AV by default."""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import numpy as np
+
+from repro.core import make_policy
+
+__all__ = ["DataConfig", "ShardCache", "TokenDataset"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    shard_tokens_min: int = 1 << 14
+    shard_tokens_max: int = 1 << 17
+    n_shards: int = 256
+
+
+class ShardCache:
+    """In-memory cache of decompressed shards, paper-policy managed."""
+
+    def __init__(self, capacity_bytes: int, policy: str = "wtlfu-av"):
+        kw = {"expected_entries": 256} if "wtlfu" in policy else {}
+        self.policy = make_policy(policy, capacity_bytes, **kw)
+        self.store: dict[int, np.ndarray] = {}
+        self.fetches = 0
+
+    def get(self, shard_id: int, fetch, size_bytes: int) -> np.ndarray:
+        hit = self.policy.access(shard_id, size_bytes)
+        if hit and shard_id in self.store:
+            return self.store[shard_id]
+        data = fetch()
+        self.fetches += 1
+        if shard_id in self.policy:  # admitted
+            self.store[shard_id] = data
+        # drop anything the policy evicted
+        for k in [k for k in self.store if k not in self.policy]:
+            del self.store[k]
+        return data
+
+
+class TokenDataset:
+    """Deterministic synthetic LM data with zipf-ish token statistics;
+    ``batches()`` yields {'tokens','targets'} ready for train_step."""
+
+    def __init__(self, cfg: DataConfig, cache: ShardCache | None = None):
+        self.cfg = cfg
+        self.cache = cache
+        rng = np.random.default_rng(cfg.seed)
+        # variable shard sizes (the variable-object-size regime)
+        self._shard_len = rng.integers(
+            cfg.shard_tokens_min, cfg.shard_tokens_max, cfg.n_shards
+        )
+        # zipf-ish shard popularity (hot shards re-visited across epochs)
+        pmf = np.arange(1, cfg.n_shards + 1) ** -0.8
+        self._pmf = pmf / pmf.sum()
+
+    def _fetch_shard(self, sid: int) -> np.ndarray:
+        """Simulates fetch+decompress of a remote shard (deterministic)."""
+        n = int(self._shard_len[sid])
+        rng = np.random.default_rng([self.cfg.seed, sid])
+        # markov-ish tokens so models can actually learn structure
+        base = rng.integers(0, self.cfg.vocab_size, n).astype(np.int32)
+        shifted = np.roll(base, 1)
+        mix = rng.random(n) < 0.5
+        tokens = np.where(mix, (shifted * 31 + 7) % self.cfg.vocab_size, base)
+        zlib.crc32(tokens.tobytes())  # models the decompression cost
+        return tokens.astype(np.int32)
+
+    def get_shard(self, sid: int) -> np.ndarray:
+        if self.cache is None:
+            return self._fetch_shard(sid)
+        return self.cache.get(
+            sid, lambda: self._fetch_shard(sid), int(self._shard_len[sid]) * 4
+        )
+
+    def batches(self, steps: int, start_step: int = 0):
+        cfg = self.cfg
+        need = cfg.global_batch * (cfg.seq_len + 1)
+        for step in range(start_step, steps):
+            rng = np.random.default_rng([cfg.seed, 7, step])
+            buf = np.empty(0, np.int32)
+            while buf.size < need:
+                sid = int(rng.choice(cfg.n_shards, p=self._pmf))
+                shard = self.get_shard(sid)
+                off = int(rng.integers(0, max(1, shard.size - 1)))
+                buf = np.concatenate([buf, shard[off:]])
+            buf = buf[:need].reshape(cfg.global_batch, cfg.seq_len + 1)
+            yield step, {"tokens": buf[:, :-1], "targets": buf[:, 1:]}

@@ -1,0 +1,116 @@
+"""AdamW (self-contained — no optax dependency) with:
+
+* configurable moment dtype (f32 default; bf16 for memory-bound giants like
+  arctic-480b — see DESIGN.md §6),
+* optional per-leaf update masks (keeps padded attention heads inert),
+* global-norm clipping,
+* linear-warmup + cosine decay schedule helper.
+
+State layout mirrors the param pytree (same shardings apply), plus a scalar
+step counter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float | None = 1.0
+    moment_dtype: Any = jnp.float32
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    t = jnp.clip((step - cfg.warmup_steps) / max(1, cfg.total_steps - cfg.warmup_steps), 0, 1)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def init_state(cfg: AdamWConfig, params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def _global_norm(tree) -> jax.Array:
+    sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+
+
+def apply_updates(
+    cfg: AdamWConfig,
+    params,
+    grads,
+    state: dict,
+    mask_tree=None,
+) -> tuple[Any, dict, dict]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule(cfg, state["step"])
+    gnorm = _global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd_math(p, g, m, v, mask=None):
+        gf = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * cfg.b1 + gf * (1 - cfg.b1)
+        v32 = v.astype(jnp.float32) * cfg.b2 + jnp.square(gf) * (1 - cfg.b2)
+        u = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        if p.ndim > 1:  # decoupled weight decay on matrices only
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * u
+        if mask is not None:
+            new_p = new_p * mask
+        return new_p.astype(p.dtype), m32.astype(cfg.moment_dtype), v32.astype(cfg.moment_dtype)
+
+    _SCAN_THRESHOLD = 1 << 27  # elements; giant leaves update slice-by-slice
+
+    def upd(p, g, m, v, mask=None):
+        # For huge stacked leaves (expert banks, layer stacks) the fused-f32
+        # intermediates would transiently cost 4x leaf bytes. A fori_loop
+        # with in-place dynamic updates bounds optimizer temps to one slice
+        # and lets XLA alias the (donated) state buffers; the leading dim is
+        # the never-sharded stack dim, so slice shardings survive.
+        if p.size > _SCAN_THRESHOLD and p.ndim >= 3 and p.shape[0] > 1 and mask is None:
+            def body(i, carry):
+                pp, mm, vv = carry
+                sl = lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False)
+                np_, nm, nv = upd_math(sl(pp), sl(g), sl(mm), sl(vv))
+                put = lambda a, s: jax.lax.dynamic_update_index_in_dim(a, s, i, 0)
+                return put(pp, np_), put(mm, nm), put(vv, nv)
+
+            return jax.lax.fori_loop(0, p.shape[0], body, (p, m, v))
+        return upd_math(p, g, m, v, mask)
+
+    if mask_tree is None:
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    else:
+        out = jax.tree.map(
+            lambda p, g, m, v, msk: upd(p, g, m, v, msk),
+            params, grads, state["m"], state["v"], mask_tree,
+            is_leaf=lambda x: x is None,
+        )
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"step": step, "m": new_m, "v": new_v}, {"grad_norm": gnorm, "lr": lr}

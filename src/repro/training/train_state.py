@@ -1,0 +1,75 @@
+"""Step builders: jitted/shardable train_step, prefill_step and serve_step
+used by the training loop, the serving engine and the multi-pod dry-run."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shlib
+from repro.models import LM
+
+from .optimizer import AdamWConfig, apply_updates, init_state
+
+
+def build_train_step(model: LM, opt_cfg: AdamWConfig, *, grad_compression=None,
+                     microbatches: int = 1):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``grad_compression`` (distributed/compression.py) quantizes gradients
+    before the optimizer (error feedback folded into opt_state by the loop).
+    ``microbatches`` > 1 accumulates gradients over batch slices with a scan
+    (activation memory / step-size tradeoff; §Perf knob).
+    """
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def step(params, opt_state, batch):
+        if microbatches > 1:
+            def mb(carry, mb_batch):
+                acc = carry
+                (_, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb_batch)
+                return jax.tree.map(jnp.add, acc, g), metrics
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            split = jax.tree.map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches, *x.shape[1:]),
+                batch,
+            )
+            grads, metrics = jax.lax.scan(mb, zero, split)
+            grads = jax.tree.map(lambda g: (g / microbatches).astype(jnp.bfloat16), grads)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        if grad_compression is not None:
+            grads = grad_compression(grads)
+        params, opt_state, opt_metrics = apply_updates(opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return step
+
+
+def build_serve_step(model: LM):
+    def serve_step(params, caches, tokens, pos):
+        return model.decode_step(params, caches, tokens, pos)
+
+    return serve_step
+
+
+def build_prefill_step(model: LM, max_seq: int | None = None):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_seq=max_seq)
+
+    return prefill_step
+
+
+def abstract_train_state(model: LM, opt_cfg: AdamWConfig):
+    """ShapeDtypeStruct pytrees for (params, opt_state) — no allocation."""
+    params = model.abstract_params()
+    opt = jax.eval_shape(partial(init_state, opt_cfg), params)
+    return params, opt

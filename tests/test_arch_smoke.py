@@ -1,0 +1,141 @@
+"""Per-architecture smoke tests: instantiate a REDUCED same-family config,
+run one forward/loss and one prefill+decode step on CPU; assert shapes and
+no NaNs. The FULL configs are exercised only via the dry-run."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import LM
+
+jax.config.update("jax_enable_x64", False)
+
+B, S = 2, 24
+
+
+def tiny_model(arch: str) -> LM:
+    cfg = get_config(arch).scaled_down()
+    return LM(cfg, dtype=jnp.float32, remat=False)
+
+
+def make_batch(model: LM, key):
+    cfg = model.cfg
+    kt, kf = jax.random.split(key)
+    n_text = S
+    batch = {}
+    if cfg.frontend == "vision":
+        batch["frontend"] = jax.random.normal(kf, (B, cfg.num_frontend_tokens, cfg.d_model)) * 0.02
+    elif cfg.frontend == "audio":
+        batch["frontend"] = jax.random.normal(kf, (B, S, cfg.d_model)) * 0.02
+    tokens = jax.random.randint(kt, (B, n_text), 0, cfg.vocab_size)
+    batch["tokens"] = tokens
+    batch["targets"] = jnp.roll(tokens, -1, axis=1)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_loss(arch):
+    model = tiny_model(arch)
+    params = model.init(jax.random.key(0))
+    batch = make_batch(model, jax.random.key(1))
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+    assert float(loss) > 0
+    assert np.isfinite(float(metrics["ce"]))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_decreases_loss(arch):
+    """One SGD step on the same batch must reduce the loss (gradient sanity)."""
+    model = tiny_model(arch)
+    params = model.init(jax.random.key(0))
+    batch = make_batch(model, jax.random.key(1))
+
+    @jax.jit
+    def step(p):
+        (l0, _), g = jax.value_and_grad(model.loss, has_aux=True)(p, batch)
+        p2 = jax.tree.map(lambda w, gw: w - 0.5 * gw, p, g)
+        l1, _ = model.loss(p2, batch)
+        return l0, l1, g
+
+    l0, l1, g = step(params)
+    assert np.isfinite(float(l0)) and np.isfinite(float(l1))
+    assert float(l1) < float(l0), f"{arch}: loss did not decrease ({l0} -> {l1})"
+    gnorm = jax.tree.reduce(lambda a, b: a + b, jax.tree.map(lambda x: jnp.abs(x).sum(), g))
+    assert np.isfinite(float(gnorm))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_shapes(arch):
+    model = tiny_model(arch)
+    cfg = model.cfg
+    params = model.init(jax.random.key(0))
+    batch = make_batch(model, jax.random.key(1))
+    max_seq = S + 8
+
+    logits, caches = jax.jit(lambda p, b: model.prefill(p, b, max_seq=max_seq))(params, batch)
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits)).all(), f"{arch}: prefill logits NaN"
+
+    next_tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
+    pos0 = batch["tokens"].shape[1] + (cfg.num_frontend_tokens if cfg.frontend == "vision" else 0)
+    step = jax.jit(model.decode_step)
+    logits2, caches = step(params, caches, next_tok, jnp.int32(pos0))
+    assert logits2.shape == (B, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits2)).all(), f"{arch}: decode logits NaN"
+    logits3, _ = step(params, caches, next_tok, jnp.int32(pos0 + 1))
+    assert np.isfinite(np.asarray(logits3)).all()
+
+
+@pytest.mark.parametrize(
+    "arch", ["smollm-135m", "rwkv6-7b", "recurrentgemma-2b", "deepseek-v2-lite-16b"]
+)
+def test_decode_matches_full_forward(arch):
+    """Prefill+decode of token t must equal the full-forward logits at t
+    (the decode path is a different code path; they must agree). MoE
+    capacity drops are disabled (decode never drops; the comparison tests
+    code-path equivalence, not drop policy)."""
+    import dataclasses
+
+    cfg = tiny_model(arch).cfg
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=100.0)
+        )
+    model = LM(cfg, dtype=jnp.float32, remat=False)
+    params = model.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+
+    # full forward logits at position S-1 predicted from prefix S-1:
+    batch_full = {"tokens": toks, "targets": jnp.roll(toks, -1, 1)}
+    prefix = {"tokens": toks[:, : S - 1]}
+    logits_pre, caches = jax.jit(lambda p, b: model.prefill(p, b, max_seq=S + 4))(params, prefix)
+    logits_dec, _ = jax.jit(model.decode_step)(params, caches, toks[:, S - 1], jnp.int32(S - 1))
+
+    logits_ref, _ = jax.jit(lambda p, b: model.prefill(p, b, max_seq=S + 4))(params, batch_full)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec), np.asarray(logits_ref), atol=2e-3, rtol=2e-2,
+    )
+
+
+def test_param_counts_match_published():
+    """Analytic param counts should land near the published sizes."""
+    expect = {
+        "starcoder2-15b": (14e9, 17e9),
+        "gemma2-27b": (26e9, 29e9),
+        # assigned spec says GQA kv=8 (the 35B figure matches the kv=64
+        # original; with kv=8 the same dims give ~30B)
+        "command-r-35b": (28e9, 37e9),
+        "smollm-135m": (0.12e9, 0.15e9),
+        "arctic-480b": (450e9, 510e9),
+        "deepseek-v2-lite-16b": (14e9, 18e9),
+        "recurrentgemma-2b": (2.2e9, 3.2e9),
+        "rwkv6-7b": (6e9, 8.5e9),
+        "seamless-m4t-large-v2": (1.2e9, 2.5e9),
+        "internvl2-1b": (0.4e9, 0.8e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]B"

@@ -1,0 +1,209 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp
+oracles, executed in interpret mode on CPU (kernels target TPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+# ---------------------------------------------------------------------------
+# count-min sketch
+# ---------------------------------------------------------------------------
+from repro.kernels.cms import ops as cms_ops
+from repro.kernels.cms import ref as cms_ref
+
+
+class TestCMSKernel:
+    @pytest.mark.parametrize("width", [512, 1024, 4096])
+    @pytest.mark.parametrize("n_keys", [1, 64, 300])
+    def test_update_matches_ref(self, width, n_keys):
+        rng = np.random.default_rng(width + n_keys)
+        table = jnp.asarray(rng.integers(0, 10, (cms_ref.ROWS, width)), jnp.int32)
+        keys = jnp.asarray(rng.integers(0, 1 << 31, n_keys), jnp.int32)
+        a = cms_ops.update(table, keys, use_pallas=True)
+        b = cms_ops.update(table, keys, use_pallas=False)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @pytest.mark.parametrize("width", [512, 2048])
+    def test_estimate_matches_ref(self, width):
+        rng = np.random.default_rng(width)
+        table = jnp.asarray(rng.integers(0, 15, (cms_ref.ROWS, width)), jnp.int32)
+        keys = jnp.asarray(rng.integers(0, 1 << 31, 200), jnp.int32)
+        a = cms_ops.estimate(table, keys, use_pallas=True)
+        b = cms_ops.estimate(table, keys, use_pallas=False)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_cap_saturation(self):
+        table = cms_ops.make_table(512)
+        keys = jnp.full((100,), 42, jnp.int32)
+        table = cms_ops.update(table, keys, cap=15)
+        assert int(cms_ops.estimate(table, jnp.asarray([42], jnp.int32))[0]) == 15
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.integers(0, 100), min_size=1, max_size=128))
+    def test_never_underestimates(self, key_list):
+        from collections import Counter
+
+        table = cms_ops.make_table(1024)
+        keys = jnp.asarray(key_list, jnp.int32)
+        table = cms_ops.update(table, keys, cap=255)
+        est = np.asarray(cms_ops.estimate(table, keys))
+        cnt = Counter(key_list)
+        for i, k in enumerate(key_list):
+            assert est[i] >= cnt[k]
+
+    def test_reset_halves(self):
+        table = cms_ops.make_table(512)
+        table = cms_ops.update(table, jnp.asarray([7] * 8, jnp.int32), cap=255)
+        before = int(cms_ops.estimate(table, jnp.asarray([7], jnp.int32))[0])
+        after = int(cms_ops.estimate(cms_ops.reset(table), jnp.asarray([7], jnp.int32))[0])
+        assert after == before // 2
+
+    def test_device_sketch_tracks_frequency(self):
+        sk = cms_ops.DeviceSketch(256)
+        for _ in range(5):
+            sk.increment(jnp.asarray([1, 2, 3], jnp.int32))
+        est = np.asarray(sk.estimate(jnp.asarray([1, 99], jnp.int32)))
+        assert est[0] >= 5 and est[1] == 0
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+from repro.kernels.attention.flash import flash_attention_fwd_pallas
+from repro.kernels.attention.ref import attention_dense_ref, flash_attention_ref
+
+
+def _mk_qkv(rng, B, S, T, nq, nkv, hd, hv=None, dtype=jnp.float32):
+    hv = hv or hd
+    q = jnp.asarray(rng.normal(size=(B, S, nq, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, T, nkv, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, T, nkv, hv)), dtype)
+    return q, k, v
+
+
+class TestFlashKernel:
+    @pytest.mark.parametrize("S,T", [(128, 128), (256, 256), (100, 100), (64, 192)])
+    @pytest.mark.parametrize("nq,nkv", [(4, 4), (8, 2), (6, 1)])
+    def test_fwd_matches_dense(self, S, T, nq, nkv):
+        rng = np.random.default_rng(S + T + nq)
+        q, k, v = _mk_qkv(rng, 2, S, T, nq, nkv, 32)
+        scale = 32 ** -0.5
+        out = flash_attention_fwd_pallas(
+            jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+            scale, causal=(S == T), bq=64, bk=64,
+        )
+        out = jnp.swapaxes(out, 1, 2)
+        ref = attention_dense_ref(q, k, v, scale, causal=(S == T))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-4)
+
+    @pytest.mark.parametrize("window", [None, 32])
+    @pytest.mark.parametrize("softcap", [None, 30.0])
+    def test_masks_and_softcap(self, window, softcap):
+        rng = np.random.default_rng(7)
+        q, k, v = _mk_qkv(rng, 1, 160, 160, 4, 2, 16)
+        scale = 0.25
+        out = flash_attention_fwd_pallas(
+            jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+            scale, causal=True, window=window, softcap=softcap, bq=32, bk=32,
+        )
+        out = jnp.swapaxes(out, 1, 2)
+        ref = attention_dense_ref(q, k, v, scale, causal=True, window=window, softcap=softcap)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-4)
+
+    def test_bf16(self):
+        rng = np.random.default_rng(3)
+        q, k, v = _mk_qkv(rng, 1, 128, 128, 4, 4, 32, dtype=jnp.bfloat16)
+        out = flash_attention_fwd_pallas(
+            jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+            0.18, causal=True, bq=64, bk=64,
+        )
+        ref = attention_dense_ref(q, k, v, 0.18, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(jnp.swapaxes(out, 1, 2), dtype=np.float32),
+            np.asarray(ref, dtype=np.float32), atol=3e-2, rtol=3e-2,
+        )
+
+    def test_mla_head_dims(self):
+        """qk dim != v dim (DeepSeek MLA expanded form)."""
+        rng = np.random.default_rng(5)
+        q, k, v = _mk_qkv(rng, 1, 128, 128, 4, 4, 48, hv=16)
+        out = flash_attention_fwd_pallas(
+            jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+            0.2, causal=True, bq=64, bk=64,
+        )
+        ref = attention_dense_ref(q, k, v, 0.2, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(jnp.swapaxes(out, 1, 2)), np.asarray(ref), atol=2e-5, rtol=2e-4
+        )
+
+
+class TestFlashRefGrads:
+    @pytest.mark.parametrize("causal,window,softcap", [
+        (True, None, None), (True, 16, None), (True, None, 30.0), (False, None, None),
+    ])
+    def test_vjp_matches_dense(self, causal, window, softcap):
+        rng = np.random.default_rng(11)
+        q, k, v = _mk_qkv(rng, 2, 65, 65, 4, 2, 16)
+        scale = 0.25
+
+        def f(fn):
+            return lambda q, k, v: (fn(q, k, v) ** 2).sum()
+
+        flash = f(lambda q, k, v: flash_attention_ref(q, k, v, scale, causal, window, softcap, 32))
+        dense = f(lambda q, k, v: attention_dense_ref(q, k, v, scale, causal, window, softcap))
+        ga = jax.grad(flash, argnums=(0, 1, 2))(q, k, v)
+        gb = jax.grad(dense, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(ga, gb):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4, rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# wkv6
+# ---------------------------------------------------------------------------
+from repro.kernels.wkv.ops import wkv6
+from repro.kernels.wkv.ref import wkv6_chunked, wkv6_scan
+
+
+class TestWkv6Kernel:
+    @pytest.mark.parametrize("T", [32, 100, 256])
+    @pytest.mark.parametrize("K", [16, 64])
+    def test_matches_scan(self, T, K):
+        rng = np.random.default_rng(T + K)
+        B, H, V = 2, 2, K
+        r = jnp.asarray(rng.normal(size=(B, T, H, K)), jnp.float32) * 0.5
+        k = jnp.asarray(rng.normal(size=(B, T, H, K)), jnp.float32) * 0.5
+        v = jnp.asarray(rng.normal(size=(B, T, H, V)), jnp.float32) * 0.5
+        w = jnp.asarray(rng.uniform(0.2, 0.999, size=(B, T, H, K)), jnp.float32)
+        u = jnp.asarray(rng.normal(size=(H, K)), jnp.float32) * 0.1
+        a = wkv6(r, k, v, w, u, chunk=32)
+        b = wkv6_scan(r, k, v, w, u)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-4)
+
+    def test_extreme_decay(self):
+        rng = np.random.default_rng(0)
+        B, T, H, K = 1, 64, 1, 16
+        r = jnp.asarray(rng.normal(size=(B, T, H, K)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, T, H, K)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, T, H, K)), jnp.float32)
+        w = jnp.asarray(rng.uniform(1e-7, 1.0, size=(B, T, H, K)), jnp.float32)
+        u = jnp.asarray(rng.normal(size=(H, K)), jnp.float32)
+        a = wkv6(r, k, v, w, u, chunk=16)
+        b = wkv6_scan(r, k, v, w, u)
+        assert np.isfinite(np.asarray(a)).all()
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4)
+
+    def test_chunked_jnp_matches_scan_bf16(self):
+        rng = np.random.default_rng(1)
+        B, T, H, K = 1, 96, 2, 16
+        mk = lambda *s: jnp.asarray(rng.normal(size=s), jnp.bfloat16) * 0.5
+        r, k, v = mk(B, T, H, K), mk(B, T, H, K), mk(B, T, H, K)
+        w = jnp.asarray(rng.uniform(0.5, 0.999, size=(B, T, H, K)), jnp.bfloat16)
+        u = mk(H, K)
+        a = wkv6_chunked(r, k, v, w, u, chunk=32)
+        b = wkv6_scan(r, k, v, w, u)
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=0.15, rtol=0.1
+        )

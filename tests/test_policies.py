@@ -1,0 +1,149 @@
+"""Cross-policy property and behaviour tests (hypothesis)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import AccessTrace, make_policy, simulate
+from repro.core.belady import BeladySizeCache, next_access_index
+
+ALL_POLICIES = [
+    "lru",
+    "sampled_lfu",
+    "gdsf",
+    "adaptsize",
+    "lhd",
+    "lrb",
+    "wtlfu-iv",
+    "wtlfu-qv",
+    "wtlfu-av",
+    "wtlfu-av-sampled_frequency",
+    "wtlfu-qv-sampled_needed_size",
+    "wtlfu-iv-random",
+]
+
+accesses_strategy = st.lists(
+    st.tuples(
+        st.integers(min_value=0, max_value=40),  # key
+        st.integers(min_value=1, max_value=700),  # size
+    ),
+    min_size=1,
+    max_size=300,
+)
+
+
+def _stable_sizes(pairs):
+    """Each object keeps its first-seen size (policies assume stable sizes)."""
+    seen = {}
+    out = []
+    for k, s in pairs:
+        out.append((k, seen.setdefault(k, s)))
+    return out
+
+
+@pytest.mark.parametrize("name", ALL_POLICIES)
+@settings(max_examples=25, deadline=None)
+@given(pairs=accesses_strategy)
+def test_capacity_never_exceeded(name, pairs):
+    pairs = _stable_sizes(pairs)
+    policy = make_policy(name, 1000, **({"expected_entries": 32} if "wtlfu" in name else {}))
+    simulate(policy, pairs, check_invariants=True)
+
+
+@pytest.mark.parametrize("name", ALL_POLICIES)
+@settings(max_examples=10, deadline=None)
+@given(pairs=accesses_strategy)
+def test_contains_consistent_with_hits(name, pairs):
+    """An access to a key reported resident must be a hit, and vice versa."""
+    pairs = _stable_sizes(pairs)
+    policy = make_policy(name, 1000, **({"expected_entries": 32} if "wtlfu" in name else {}))
+    for k, s in pairs:
+        resident = k in policy
+        hit = policy.access(k, s)
+        assert hit == resident
+
+
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_deterministic_across_runs(name):
+    rng = np.random.default_rng(7)
+    pairs = _stable_sizes(
+        [(int(k), int(s)) for k, s in zip(rng.integers(0, 100, 3000), rng.integers(1, 500, 3000))]
+    )
+    kw = {"expected_entries": 64} if "wtlfu" in name else {}
+    a = make_policy(name, 5000, **kw)
+    b = make_policy(name, 5000, **kw)
+    sa = simulate(a, pairs)
+    sb = simulate(b, pairs)
+    assert sa.hits == sb.hits
+    assert sa.bytes_hit == sb.bytes_hit
+
+
+def _trace(seed=0, n=4000, keys=60, max_size=400):
+    rng = np.random.default_rng(seed)
+    k = rng.integers(0, keys, n).astype(np.int64)
+    sizes_per = rng.integers(1, max_size, keys).astype(np.int64)
+    return AccessTrace("t", k, sizes_per[k])
+
+
+def test_next_access_index():
+    keys = np.array([1, 2, 1, 3, 2, 1])
+    nxt = next_access_index(keys)
+    assert list(nxt[:5]) == [2, 4, 5, 1 << 62, 1 << 62]
+
+
+def test_belady_beats_online_policies_unit_size():
+    """With unit sizes BeladySize == Belady's MIN, which is optimal."""
+    rng = np.random.default_rng(3)
+    k = rng.integers(0, 50, 5000).astype(np.int64)
+    tr = AccessTrace("u", k, np.ones_like(k))
+    opt = simulate(make_policy("belady", 20, trace=tr), tr)
+    for name in ["lru", "wtlfu-av", "gdsf", "sampled_lfu"]:
+        kw = {"expected_entries": 20} if "wtlfu" in name else {}
+        online = simulate(make_policy(name, 20, **kw), tr)
+        assert opt.hits >= online.hits, f"{name} beat Belady?!"
+
+
+def test_belady_dominates_lru_variable_sizes():
+    tr = _trace(seed=5)
+    cap = 3000
+    opt = simulate(make_policy("belady", cap, trace=tr), tr)
+    lru = simulate(make_policy("lru", cap), tr)
+    assert opt.hit_ratio >= lru.hit_ratio
+
+
+def test_belady_trace_mismatch_raises():
+    tr = _trace(seed=1)
+    other = _trace(seed=2)
+    p = make_policy("belady", 1000, trace=tr)
+    with pytest.raises(ValueError):
+        simulate(p, other)
+
+
+def test_adaptsize_large_cache_pathology():
+    """Paper §5.2: AdaptSize fails to utilize a large cache; AV fills it."""
+    tr = _trace(seed=9, n=20_000, keys=400, max_size=5000)
+    cap = int(tr.total_object_bytes * 0.9)
+    ads = make_policy("adaptsize", cap)
+    av = make_policy("wtlfu-av", cap, expected_entries=400)
+    simulate(ads, tr)
+    simulate(av, tr)
+    assert ads.used_bytes() / cap < 0.6  # pathologically under-utilized
+    assert av.used_bytes() / cap > 0.8
+    assert av.stats.hit_ratio > ads.stats.hit_ratio
+
+
+def test_gdsf_prefers_small_frequent():
+    """GDSF should keep small, frequent objects over large, rare ones."""
+    pairs = []
+    for i in range(200):
+        pairs.append((1, 10))  # small + hot
+        pairs.append((1000 + i % 20, 900))  # large rotating set
+    g = make_policy("gdsf", 2000)
+    simulate(g, pairs)
+    assert 1 in g
+
+
+def test_policy_factory_rejects_unknown():
+    with pytest.raises(ValueError):
+        make_policy("clockpro", 10)

@@ -1,0 +1,242 @@
+"""Serving stack tests: block pool invariants, prefix-cache semantics,
+scheduler behaviour, and end-to-end engine correctness (cache on == cache
+off, with prefill compute saved)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.models import LM
+from repro.serving import (
+    BlockPool,
+    Engine,
+    EngineConfig,
+    PrefixCache,
+    PrefixCacheConfig,
+    Request,
+    Scheduler,
+    SchedulerConfig,
+    block_hashes,
+    kv_bytes_per_token,
+)
+
+
+class TestBlockPool:
+    def test_alloc_free_cycle(self):
+        pool = BlockPool(4)
+        ids = pool.alloc(3)
+        assert len(ids) == 3 and pool.num_free == 1
+        assert pool.alloc(2) is None  # insufficient
+        pool.unref(ids[:2])
+        assert pool.num_free == 3
+
+    def test_refcount_sharing(self):
+        pool = BlockPool(2)
+        (bid,) = pool.alloc(1)
+        pool.ref([bid])
+        pool.unref([bid])
+        assert pool.refcount(bid) == 1
+        pool.unref([bid])
+        assert pool.num_free == 2
+
+    def test_underflow_raises(self):
+        pool = BlockPool(1)
+        (bid,) = pool.alloc(1)
+        pool.unref([bid])
+        with pytest.raises(Exception):
+            pool.unref([bid])
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.sampled_from(["alloc", "free"]), min_size=1, max_size=60))
+    def test_never_leaks_or_double_frees(self, ops):
+        pool = BlockPool(8)
+        live = []
+        for op in ops:
+            if op == "alloc":
+                got = pool.alloc(1)
+                if got is not None:
+                    live.extend(got)
+            elif live:
+                pool.unref([live.pop()])
+        assert pool.num_used == len(live)
+        assert pool.num_free + pool.num_used == 8
+
+
+class TestBlockHashes:
+    def test_prefix_property(self):
+        a = block_hashes([1, 2, 3, 4, 5, 6, 7, 8], 4)
+        b = block_hashes([1, 2, 3, 4, 9, 9, 9, 9], 4)
+        assert a[0] == b[0] and a[1] != b[1]
+
+    def test_partial_block_excluded(self):
+        assert len(block_hashes([1, 2, 3], 4)) == 0
+        assert len(block_hashes([1, 2, 3, 4, 5], 4)) == 1
+
+    def test_chain_depends_on_history(self):
+        a = block_hashes([1, 2, 3, 4], 2)
+        b = block_hashes([9, 9, 3, 4], 2)
+        assert a[1] != b[1]  # same block tokens, different history
+
+
+def make_cache(policy="wtlfu-av", capacity_blocks=16, block_size=4, bpt=10):
+    return PrefixCache(
+        PrefixCacheConfig(
+            capacity_bytes=capacity_blocks * block_size * bpt,
+            block_size=block_size,
+            bytes_per_token=bpt,
+            policy=policy,
+        )
+    )
+
+
+class TestPrefixCache:
+    def test_miss_then_hit(self):
+        c = make_cache()
+        prompt = list(range(16))
+        n, e = c.lookup(prompt)
+        assert n == 0 and e is None
+        assert c.offer(prompt)
+        n, e = c.lookup(prompt)
+        assert n == 16 and e is not None
+
+    def test_longest_prefix_match(self):
+        c = make_cache()
+        c.offer(list(range(8)))  # 2 blocks
+        n, _ = c.lookup(list(range(8)) + [99, 98, 97, 96])
+        assert n == 8
+
+    def test_diverging_prefix_no_match(self):
+        c = make_cache()
+        c.offer(list(range(8)))
+        n, e = c.lookup([7, 6, 5, 4, 3, 2, 1, 0])
+        assert n == 0 and e is None
+
+    def test_eviction_frees_blocks(self):
+        c = make_cache(capacity_blocks=8, block_size=4)
+        for i in range(20):  # each entry = 2 blocks; pool holds 8
+            c.offer([i * 100 + j for j in range(8)])
+        assert c.pool.num_used <= c.pool.num_blocks
+        # resident entries and policy must agree
+        for k in c.entries:
+            assert k in c.policy
+
+    @pytest.mark.parametrize("policy", ["wtlfu-av", "wtlfu-qv", "wtlfu-iv", "lru", "gdsf"])
+    def test_policies_plug_in(self, policy):
+        c = make_cache(policy=policy)
+        rng = np.random.default_rng(0)
+        for _ in range(300):
+            base = int(rng.integers(0, 12))
+            length = int(rng.integers(1, 5)) * 4
+            prompt = [base * 1000 + j for j in range(length)]
+            c.lookup(prompt)
+            c.offer(prompt)
+        s = c.stats()
+        assert 0.0 <= s["token_hit_ratio"] <= 1.0
+        assert s["blocks_used"] <= c.pool.num_blocks
+
+    def test_hot_prefix_survives_scans(self):
+        """TinyLFU's raison d'etre: a scan of one-off prefixes must not
+        evict the hot prefix (LRU fails this)."""
+        hot = list(range(16))
+        results = {}
+        for policy in ("wtlfu-av", "lru"):
+            c = make_cache(policy=policy, capacity_blocks=12, block_size=4)
+            for _ in range(30):
+                c.lookup(hot)
+                c.offer(hot)
+            for i in range(50):  # scan of cold one-off prefixes
+                cold = [10_000 + i * 100 + j for j in range(16)]
+                c.lookup(cold)
+                c.offer(cold)
+            n, _ = c.lookup(hot)
+            results[policy] = n
+        assert results["wtlfu-av"] == 16, "AV evicted the hot prefix"
+        assert results["lru"] == 0, "scan should flush LRU (sanity)"
+
+
+class TestScheduler:
+    def test_prefill_budget_and_slots(self):
+        s = Scheduler(SchedulerConfig(max_running=2, prefill_token_budget=10))
+        for i in range(4):
+            s.submit(Request(i, list(range(6)), 2))
+        pf, _ = s.schedule()
+        assert len(pf) == 1  # budget 10 fits one 6-token prefill... second would exceed
+        for r in pf:
+            s.on_prefilled(r)
+        pf2, dec = s.schedule()
+        assert len(pf2) == 1 and len(dec) == 1
+
+    def test_completion_flow(self):
+        s = Scheduler(SchedulerConfig())
+        r = Request(0, [1, 2, 3], 2)
+        s.submit(r)
+        pf, _ = s.schedule()
+        s.on_prefilled(pf[0])
+        s.on_token(r, 7)
+        assert not r.done
+        s.on_token(r, 8)
+        assert r.done and r in s.finished and not s.has_work
+
+    def test_preemption_resets(self):
+        s = Scheduler(SchedulerConfig())
+        r = Request(0, [1, 2, 3, 4], 4)
+        s.submit(r)
+        pf, _ = s.schedule()
+        s.on_prefilled(r)
+        s.on_token(r, 5)
+        s.preempt(r)
+        assert r.state == "waiting" and r.generated == [] and r.preemptions == 1
+        assert s.waiting[0] is r
+
+
+@pytest.fixture(scope="module")
+def tiny_engine_parts():
+    cfg = get_config("smollm-135m").scaled_down(num_layers=2)
+    model = LM(cfg, dtype=jnp.float32, remat=False)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+class TestEngine:
+    def _mk(self, model, params, policy="wtlfu-av", cap=1 << 22):
+        return Engine(model, params, EngineConfig(
+            max_seq=64, cache_capacity_bytes=cap, cache_policy=policy, block_size=8))
+
+    def test_cached_equals_uncached(self, tiny_engine_parts):
+        cfg, model, params = tiny_engine_parts
+        rng = np.random.default_rng(1)
+        shared = [int(x) for x in rng.integers(0, cfg.vocab_size, 24)]
+        prompts = [shared + [int(x) for x in rng.integers(0, cfg.vocab_size, 4)]
+                   for _ in range(3)]
+        cold = self._mk(model, params)
+        warm = self._mk(model, params)
+        # warm: seed the cache with the shared prefix, then serve
+        warm.generate([shared], max_new_tokens=2)
+        out_cold = cold.generate(prompts, max_new_tokens=6)
+        out_warm = warm.generate(prompts, max_new_tokens=6)
+        for a, b in zip(out_cold, out_warm):
+            assert a["tokens"] == b["tokens"], "prefix cache changed outputs"
+        assert any(r["cached_tokens"] > 0 for r in out_warm)
+        assert warm.prefill_tokens_saved > 0
+
+    def test_stats_accounting(self, tiny_engine_parts):
+        _, model, params = tiny_engine_parts
+        eng = self._mk(model, params)
+        p = list(range(16))
+        eng.generate([p, p, p], max_new_tokens=2)
+        s = eng.stats()
+        assert s["prefill_tokens_saved"] > 0
+        assert 0 < s["prefill_savings_frac"] < 1
+        assert s["request_hit_ratio"] > 0
+
+    def test_serve_with_scheduler(self, tiny_engine_parts):
+        _, model, params = tiny_engine_parts
+        eng = self._mk(model, params)
+        prompts = [list(range(i, i + 12)) for i in range(5)]
+        res = eng.serve(prompts, max_new_tokens=3)
+        assert len(res) == 5
+        assert all(len(r["tokens"]) == 3 for r in res)

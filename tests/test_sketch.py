@@ -1,0 +1,97 @@
+"""FrequencySketch unit + property tests (paper Section 3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.sketch import FrequencySketch
+
+
+def test_estimate_counts_occurrences():
+    sk = FrequencySketch(1024, doorkeeper=False)
+    for _ in range(7):
+        sk.increment(42)
+    assert sk.estimate(42) == 7
+    assert sk.estimate(43) == 0
+
+
+def test_doorkeeper_absorbs_first_occurrence():
+    sk = FrequencySketch(1024, doorkeeper=True)
+    sk.increment(7)
+    # first occurrence only in the doorkeeper, estimate includes it
+    assert sk.estimate(7) == 1
+    assert all(c == 0 for c in sk.table)
+    sk.increment(7)
+    assert sk.estimate(7) == 2
+
+
+def test_counter_cap():
+    sk = FrequencySketch(64, cap=15, doorkeeper=False, sample_factor=10_000)
+    for _ in range(100):
+        sk.increment(1)
+    assert sk.estimate(1) == 15
+
+
+def test_reset_halves_counters():
+    sk = FrequencySketch(16, sample_factor=10, doorkeeper=False)
+    # sample size = 160; hammer one key below cap via distinct keys
+    for i in range(159):
+        sk.increment(i % 8)
+    assert sk.resets == 0
+    before = sk.estimate(0)
+    sk.increment(123456)  # trigger reset at op 160
+    assert sk.resets == 1
+    assert sk.estimate(0) <= (before // 2) + 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    keys=st.lists(st.integers(min_value=0, max_value=50), min_size=1, max_size=300),
+    probe=st.integers(min_value=0, max_value=50),
+)
+def test_never_underestimates(keys, probe):
+    """CMS property: estimate(k) >= true count (before cap/reset kick in)."""
+    sk = FrequencySketch(4096, cap=1000, sample_factor=1000, doorkeeper=False)
+    for k in keys:
+        sk.increment(k)
+    true = keys.count(probe)
+    assert sk.estimate(probe) >= min(true, 1000)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=10_000), min_size=50, max_size=500))
+def test_error_bounded_with_sparse_keys(keys):
+    """With a wide table the estimate should be nearly exact."""
+    sk = FrequencySketch(1 << 14, cap=10_000, sample_factor=10_000, doorkeeper=False)
+    from collections import Counter
+
+    for k in keys:
+        sk.increment(k)
+    counts = Counter(keys)
+    # total over-estimate across all keys bounded by collisions; check typical
+    errs = [sk.estimate(k) - c for k, c in counts.items()]
+    assert min(errs) >= 0
+    assert np.mean(errs) < 1.0
+
+
+def test_conservative_beats_plain_on_collisions():
+    """Minimal-increment update should never over-count more than plain CMS."""
+    a = FrequencySketch(64, cap=255, sample_factor=10_000, doorkeeper=False, conservative=True)
+    b = FrequencySketch(64, cap=255, sample_factor=10_000, doorkeeper=False, conservative=False)
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 500, size=2000)
+    for k in keys.tolist():
+        a.increment(k)
+        b.increment(k)
+    for k in set(keys.tolist()):
+        assert a.estimate(k) <= b.estimate(k)
+
+
+def test_deterministic():
+    a = FrequencySketch(256)
+    b = FrequencySketch(256)
+    for k in [5, 9, 5, 5, 123, 9]:
+        a.increment(k)
+        b.increment(k)
+    assert a.estimate(5) == b.estimate(5) == 3

@@ -1,0 +1,101 @@
+"""End-to-end behaviour tests for the paper's system: the full path from
+trace -> policy -> metrics, the paper's headline claims as assertions, and
+the cross-layer integrations (serving cache + data cache)."""
+
+import numpy as np
+import pytest
+
+from repro.core import make_policy, simulate
+from repro.traces import make_trace
+
+
+@pytest.fixture(scope="module")
+def traces():
+    return {n: make_trace(n, seed=0, scale=0.03) for n in ("msr2", "cdn1")}
+
+
+def _run(name, trace, frac, **kw):
+    cap = max(1, int(trace.total_object_bytes * frac))
+    if "wtlfu" in name:
+        kw.setdefault("expected_entries",
+                      max(64, int(cap / trace.mean_object_size)))
+    p = make_policy(name, cap, **kw)
+    st = simulate(p, trace)
+    return p, st
+
+
+class TestPaperClaims:
+    """The paper's section-5 findings as executable assertions (on
+    synthetic paper-class traces; DESIGN.md §8)."""
+
+    def test_av_beats_iv_and_lru_on_hit_ratio(self, traces):
+        for tname, tr in traces.items():
+            _, av = _run("wtlfu-av", tr, 0.02)
+            _, iv = _run("wtlfu-iv", tr, 0.02)
+            _, lru = _run("lru", tr, 0.02)
+            assert av.hit_ratio > lru.hit_ratio, tname
+            assert av.hit_ratio >= iv.hit_ratio - 0.01, tname
+
+    def test_qv_strong_on_byte_hit_ratio(self, traces):
+        tr = traces["cdn1"]
+        _, qv = _run("wtlfu-qv", tr, 0.02)
+        _, lru = _run("lru", tr, 0.02)
+        assert qv.byte_hit_ratio > lru.byte_hit_ratio
+
+    def test_early_pruning_reduces_victims_not_hit_ratio(self, traces):
+        tr = traces["msr2"]
+        _, pruned = _run("wtlfu-av", tr, 0.01, early_pruning=True)
+        _, full = _run("wtlfu-av", tr, 0.01, early_pruning=False)
+        assert pruned.victims_per_access < full.victims_per_access / 1.5
+        assert abs(pruned.hit_ratio - full.hit_ratio) < 0.03
+
+    def test_adaptsize_underutilizes_large_caches(self, traces):
+        tr = traces["cdn1"]
+        ads, st = _run("adaptsize", tr, 0.9)
+        av, _ = _run("wtlfu-av", tr, 0.9)
+        assert ads.used_bytes() < 0.6 * ads.capacity
+        assert av.used_bytes() > 0.8 * av.capacity
+
+    def test_av_cheaper_than_lhd_and_lrb(self, traces):
+        tr = traces["cdn1"].slice(20_000)
+        _, av = _run("wtlfu-av", tr, 0.01)
+        _, lhd = _run("lhd", tr, 0.01)
+        _, lrb = _run("lrb", tr, 0.01)
+        assert av.wall_seconds < lhd.wall_seconds * 1.5
+        assert av.wall_seconds < lrb.wall_seconds
+
+    def test_belady_upper_bounds_everyone(self, traces):
+        tr = traces["msr2"].slice(30_000)
+        cap = int(tr.total_object_bytes * 0.02)
+        opt = simulate(make_policy("belady", cap, trace=tr), tr)
+        for name in ("lru", "wtlfu-av", "gdsf"):
+            _, st = _run(name, tr, 0.02)
+            assert opt.hit_ratio >= st.hit_ratio - 0.02, name
+
+
+class TestCrossLayerIntegration:
+    def test_same_policy_object_drives_all_layers(self):
+        """One policy implementation serves the simulator, the serving
+        prefix cache and the data shard cache."""
+        from repro.serving import PrefixCache, PrefixCacheConfig
+        from repro.training.data import ShardCache
+
+        pc = PrefixCache(PrefixCacheConfig(
+            capacity_bytes=1 << 16, block_size=4, bytes_per_token=16,
+            policy="wtlfu-av"))
+        sc = ShardCache(1 << 16, policy="wtlfu-av")
+        assert type(pc.policy).__name__ == "SizeAwareWTinyLFU"
+        assert type(sc.policy).__name__ == "SizeAwareWTinyLFU"
+
+    def test_policy_stats_flow_to_serving_metrics(self):
+        from repro.serving import PrefixCache, PrefixCacheConfig
+
+        pc = PrefixCache(PrefixCacheConfig(
+            capacity_bytes=1 << 16, block_size=4, bytes_per_token=16))
+        p = list(range(8))
+        pc.lookup(p)
+        pc.offer(p)
+        pc.lookup(p)
+        s = pc.stats()
+        assert s["request_hit_ratio"] == 0.5
+        assert s["token_hit_ratio"] > 0

@@ -1,0 +1,197 @@
+"""Size-aware W-TinyLFU behaviour tests, including the paper's worked
+examples (Figures 4, 5, 6) executed literally."""
+
+import pytest
+
+from repro.core import SizeAwareWTinyLFU
+from repro.core.tinylfu import ADMISSIONS, EVICTIONS
+
+
+def make(admission, capacity=100, window_frac=0.1, eviction="lru", **kw):
+    return SizeAwareWTinyLFU(
+        capacity,
+        admission=admission,
+        eviction=eviction,
+        window_frac=window_frac,
+        expected_entries=64,
+        **kw,
+    )
+
+
+def bump(policy, key, times):
+    """Raise the sketch frequency of ``key`` without touching cache state."""
+    for _ in range(times):
+        policy.sketch.increment(key)
+
+
+def fill_main(policy, items):
+    """Place items directly in the Main cache in insertion (LRU) order."""
+    for key, size in items:
+        policy.main.insert(key, size)
+
+
+class TestAlgorithm1:
+    def test_too_large_for_cache_rejected(self):
+        p = make("av", capacity=100)
+        assert not p.access(1, 500)
+        assert 1 not in p
+        assert p.stats.rejections == 1
+
+    def test_larger_than_window_bypasses_to_main(self):
+        p = make("av", capacity=100, window_frac=0.1)
+        p.access(1, 50)  # > window (10) -> straight to Main
+        assert 1 in p.main
+        assert 1 not in p.window
+
+    def test_small_item_enters_window(self):
+        p = make("av", capacity=100, window_frac=0.1)
+        p.access(1, 5)
+        assert 1 in p.window
+
+    def test_window_eviction_cascades_to_main(self):
+        p = make("av", capacity=100, window_frac=0.1)
+        p.access(1, 6)
+        p.access(2, 6)  # pushes 1 out of the 10-byte window
+        assert 2 in p.window
+        assert 1 in p.main  # admitted: Main had free space
+
+    def test_multiple_window_victims(self):
+        """Fig. 2: one insertion can evict several Window victims."""
+        p = make("av", capacity=1000, window_frac=0.1)  # window = 100
+        p.access(1, 40)
+        p.access(2, 40)
+        p.access(3, 90)  # needs both 1 and 2 gone
+        assert 3 in p.window
+        assert 1 in p.main and 2 in p.main
+
+
+class TestPaperFigure4_IV:
+    """IV: W(freq 5) vs first Main victim J(freq 2): W admitted, J and K evicted."""
+
+    def test_fig4(self):
+        p = make("iv", capacity=110, window_frac=0.05)
+        # Main: J (LRU-most, freq 2), K (freq 1), L (freq 4); sizes force
+        # two evictions to fit W.
+        fill_main(p, [(101, 40), (102, 40), (103, 20)])  # J, K, L
+        bump(p, 101, 2)
+        bump(p, 102, 1)
+        bump(p, 103, 4)
+        bump(p, 999, 5)  # W
+        p._evict_or_admit(999, 70)  # needs 70 > free 5+... main_cap=105, used=100
+        assert 999 in p.main
+        assert 101 not in p.main and 102 not in p.main  # J, K evicted
+        assert 103 in p.main
+
+    def test_iv_rejects_when_first_victim_more_frequent(self):
+        p = make("iv", capacity=110, window_frac=0.05)
+        fill_main(p, [(101, 40), (102, 40), (103, 20)])
+        bump(p, 101, 9)
+        bump(p, 999, 5)
+        p._evict_or_admit(999, 70)
+        assert 999 not in p.main
+        assert 101 in p.main and 102 in p.main and 103 in p.main
+        assert p.stats.rejections == 1
+
+
+class TestPaperFigure5_QV:
+    """QV: W(5) beats J(2) -> J evicted; K(6) beats W -> stop; W rejected but
+    J stays evicted."""
+
+    def test_fig5(self):
+        p = make("qv", capacity=110, window_frac=0.05)
+        fill_main(p, [(101, 40), (102, 40), (103, 20)])  # J, K, L
+        bump(p, 101, 2)  # J
+        bump(p, 102, 6)  # K more frequent than W
+        bump(p, 999, 5)  # W
+        p._evict_or_admit(999, 70)
+        assert 101 not in p.main  # J evicted even though W rejected
+        assert 102 in p.main and 103 in p.main
+        assert 999 not in p.main  # W rejected (only 40+5 freed < 70)
+        assert p.stats.rejections == 1
+        assert p.stats.evictions == 1
+
+
+class TestPaperFigure6_AV:
+    """AV: W(5) vs J(6)+K(4)=10 -> W rejected, nothing evicted."""
+
+    def test_fig6(self):
+        p = make("av", capacity=110, window_frac=0.05, early_pruning=False)
+        fill_main(p, [(101, 40), (102, 40), (103, 20)])
+        bump(p, 101, 6)  # J
+        bump(p, 102, 4)  # K
+        bump(p, 999, 5)  # W
+        p._evict_or_admit(999, 70)
+        assert 999 not in p.main
+        assert 101 in p.main and 102 in p.main and 103 in p.main
+        assert p.stats.evictions == 0
+        assert p.stats.rejections == 1
+
+    def test_av_admits_when_beating_aggregate(self):
+        p = make("av", capacity=110, window_frac=0.05)
+        fill_main(p, [(101, 40), (102, 40), (103, 20)])
+        bump(p, 101, 2)
+        bump(p, 102, 2)
+        bump(p, 999, 5)  # 5 >= 2+2
+        p._evict_or_admit(999, 70)
+        assert 999 in p.main
+        assert 101 not in p.main and 102 not in p.main
+
+    def test_av_admits_into_free_space_unconditionally(self):
+        """§5.2: unlike AdaptSize, AV always admits when space is free."""
+        p = make("av", capacity=1000, window_frac=0.01)
+        p._evict_or_admit(999, 800)  # zero frequency, giant object
+        assert 999 in p.main
+
+    def test_early_pruning_stops_gathering(self):
+        p_full = make("av", capacity=1100, window_frac=0.01, early_pruning=False)
+        p_prune = make("av", capacity=1100, window_frac=0.01, early_pruning=True)
+        for p in (p_full, p_prune):
+            fill_main(p, [(100 + i, 100) for i in range(10)])
+            for i in range(10):
+                bump(p, 100 + i, 10)  # every victim very frequent
+            bump(p, 999, 1)
+            p._evict_or_admit(999, 950)  # needs ~all victims
+        assert 999 not in p_full.main and 999 not in p_prune.main
+        # pruned version must have examined strictly fewer victims
+        assert p_prune.stats.victims_examined < p_full.stats.victims_examined
+        assert p_prune.stats.victims_examined == 1  # first victim already wins
+
+
+class TestHitPaths:
+    def test_window_hit(self):
+        p = make("av")
+        p.access(1, 5)
+        assert p.access(1, 5)
+        assert p.stats.hits == 1
+
+    def test_main_hit_promotes(self):
+        p = make("av", capacity=100, window_frac=0.1, eviction="slru")
+        p.access(1, 50)  # bypass window into Main probation
+        assert p.access(1, 50)  # -> protected
+        assert 1 in p.main.protected
+
+    def test_byte_accounting(self):
+        p = make("av", capacity=100, window_frac=0.1)
+        p.access(1, 50)
+        p.access(1, 50)
+        st = p.stats
+        assert st.bytes_requested == 100
+        assert st.bytes_hit == 50
+
+
+@pytest.mark.parametrize("admission", ADMISSIONS)
+@pytest.mark.parametrize("eviction", EVICTIONS)
+def test_all_combinations_run(admission, eviction):
+    """All 18 paper combinations (3 admissions x 6 evictions) + LRU extra."""
+    import numpy as np
+
+    rng = np.random.default_rng(hash((admission, eviction)) & 0xFFFF)
+    p = SizeAwareWTinyLFU(
+        10_000, admission=admission, eviction=eviction, expected_entries=128
+    )
+    for _ in range(2000):
+        k = int(rng.zipf(1.2)) % 300
+        s = int(rng.integers(10, 900))
+        p.access(k, s)
+    assert p.used_bytes() <= p.capacity
+    assert p.stats.accesses == 2000

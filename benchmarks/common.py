@@ -14,7 +14,7 @@ import os
 import pathlib
 import time
 
-from repro.core import make_policy, simulate
+from repro.core import REGISTRY, PolicySpec, SimulationEngine
 from repro.traces import make_trace
 
 RESULTS_DIR = pathlib.Path(__file__).parent / "results"
@@ -33,18 +33,27 @@ def get_trace(name: str, seed: int = 0):
     return make_trace(name, seed=seed, scale=bench_scale())
 
 
-def run_policy(name: str, trace, cap: int, **kw) -> dict:
-    """Simulate one policy over one trace; returns a result row."""
-    if "wtlfu" in name and "expected_entries" not in kw:
+def run_policy(name: "str | PolicySpec", trace, cap: int, *, engine: SimulationEngine | None = None, **kw) -> dict:
+    """Drive one policy spec over one trace; returns a result row.
+
+    ``name`` is any registry spec (``"wtlfu-av?early_pruning=0"``); ``kw``
+    carries build-time objects (``trace=`` for belady is added here).
+    """
+    spec = PolicySpec.parse(name)
+    if (
+        spec.name.startswith("wtlfu")
+        and "expected_entries" not in kw
+        and "expected_entries" not in spec.params_dict
+    ):
         kw["expected_entries"] = max(64, int(cap / max(1.0, trace.mean_object_size)))
-    if name == "belady":
+    if spec.name == "belady":
         kw["trace"] = trace
-    policy = make_policy(name, cap, **kw)
+    policy = REGISTRY.build(spec, cap, **kw)
     t0 = time.perf_counter()
-    st = simulate(policy, trace)
+    st = (engine or SimulationEngine()).run(policy, trace).stats
     wall = time.perf_counter() - t0
     return {
-        "policy": name,
+        "policy": spec.to_string(),
         "trace": trace.name,
         "capacity": cap,
         "accesses": st.accesses,

@@ -3,24 +3,28 @@ eviction policies) on hit-ratio and byte-hit-ratio."""
 
 from __future__ import annotations
 
-import itertools
-
-from repro.core.tinylfu import ADMISSIONS, EVICTIONS
+from repro.core import available_policies
 
 from .common import CACHE_FRACS, PAPER_TRACES, emit, get_trace, run_policy
 
-# The paper's six: SLRU + 4 sampled + random ("lru" is our extra sanity point).
-PAPER_EVICTIONS = tuple(e for e in EVICTIONS if e != "lru")
+# Enumerate the W-TinyLFU family from the registry: full <admission>-<eviction>
+# product, minus the repo-extra "lru" eviction sanity point (the paper's 18
+# variants = 3 admissions x 6 evictions).
+PAPER_VARIANTS = tuple(
+    name
+    for name in available_policies(expand=True)
+    if name.count("-") == 2 and not name.endswith("-lru")
+)
 
 
-def main(traces=PAPER_TRACES, fracs=CACHE_FRACS) -> list[dict]:
+def main(traces=PAPER_TRACES, fracs=CACHE_FRACS, variants=PAPER_VARIANTS) -> list[dict]:
     rows = []
     for tname in traces:
         tr = get_trace(tname)
         for frac in fracs:
             cap = max(1, int(tr.total_object_bytes * frac))
-            for adm, ev in itertools.product(ADMISSIONS, PAPER_EVICTIONS):
-                r = run_policy(f"wtlfu-{adm}-{ev}", tr, cap)
+            for spec in variants:
+                r = run_policy(spec, tr, cap)
                 r["frac"] = frac
                 rows.append(r)
     emit("filter_variants", rows, derived_key="hit_ratio")

@@ -15,8 +15,8 @@ def main(traces=PAPER_TRACES) -> list[dict]:
         tr = get_trace(name)
         for frac in FRACS:
             cap = max(1, int(tr.total_object_bytes * frac))
-            for pruning in (True, False):
-                r = run_policy("wtlfu-av", tr, cap, early_pruning=pruning)
+            for pruning in (1, 0):
+                r = run_policy(f"wtlfu-av?early_pruning={pruning}", tr, cap)
                 r["policy"] = f"av-{'pruned' if pruning else 'full'}"
                 r["frac"] = frac
                 rows.append(r)

@@ -1,28 +1,40 @@
 """Policy shootout across all four trace classes (MSR / SYSTOR / CDN /
 TENCENT): the paper's Figure 11/12 in miniature, printed as a table.
 
+Policies come straight from the registry (spec strings, including a
+parameterized W-TinyLFU variant) and run on one shared SimulationEngine.
+
     PYTHONPATH=src python examples/policy_shootout.py
 """
 
-from repro.core import make_policy, simulate
+from repro.core import REGISTRY, SimulationEngine
 from repro.traces import make_trace
 
-POLICIES = ("lru", "adaptsize", "lhd", "gdsf", "wtlfu-qv", "wtlfu-av")
+POLICIES = (
+    "lru",
+    "adaptsize",
+    "lhd",
+    "gdsf",
+    "wtlfu-qv",
+    "wtlfu-av",
+    "wtlfu-av?early_pruning=0",
+)
 TRACES = ("msr2", "systor2", "tencent1", "cdn1")
 
 
 def main():
+    engine = SimulationEngine(chunk_size=8192)
     for tname in TRACES:
         tr = make_trace(tname, seed=0, scale=0.03)
         cap = int(tr.total_object_bytes * 0.02)
         entries = max(64, int(cap / tr.mean_object_size))
         print(f"\n=== {tname}: cache 2% of {tr.total_object_bytes/1e9:.1f} GB ===")
-        print(f"{'policy':12s} {'hit%':>8s} {'byte-hit%':>10s} {'used%':>7s}")
-        for name in POLICIES:
-            kw = {"expected_entries": entries} if "wtlfu" in name else {}
-            p = make_policy(name, cap, **kw)
-            st = simulate(p, tr)
-            print(f"{name:12s} {st.hit_ratio:8.2%} {st.byte_hit_ratio:10.2%} "
+        print(f"{'policy':26s} {'hit%':>8s} {'byte-hit%':>10s} {'used%':>7s}")
+        for spec in POLICIES:
+            kw = {"expected_entries": entries} if spec.startswith("wtlfu") else {}
+            p = REGISTRY.build(spec, cap, **kw)
+            st = engine.run(p, tr).stats
+            print(f"{spec:26s} {st.hit_ratio:8.2%} {st.byte_hit_ratio:10.2%} "
                   f"{p.used_bytes()/cap:7.1%}")
 
 

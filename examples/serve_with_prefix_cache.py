@@ -4,7 +4,8 @@ KV prefix cache is managed by the paper's AV admission policy.
 Seeds a few prompt "templates" of very different lengths (the variable-size
 regime), serves a Zipf-skewed request stream through the engine (continuous
 batching scheduler + prefill/decode), and reports prefill compute saved by
-the cache. Swap --policy to compare AV vs LRU on the same stream.
+the cache. Swap --policy to compare AV vs LRU on the same stream; any registry
+spec string works (e.g. --policy "wtlfu-av?window_frac=0.05").
 
     PYTHONPATH=src python examples/serve_with_prefix_cache.py [--policy lru]
 """
@@ -22,7 +23,8 @@ from repro.serving import Engine, EngineConfig
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--policy", default="wtlfu-av")
+    ap.add_argument("--policy", default="wtlfu-av",
+                    help="repro.core registry policy spec string")
     ap.add_argument("--requests", type=int, default=20)
     ap.add_argument("--arch", default="smollm-135m")
     args = ap.parse_args(argv)

@@ -1,7 +1,7 @@
 """Fault-tolerant training example: a reduced smollm trains for 60 steps
 while two failures are injected; the supervisor restores the latest
 checkpoint and resumes. The data pipeline's shard cache uses the paper's AV
-admission.
+admission, configured via a registry spec string.
 
     PYTHONPATH=src python examples/train_with_ft.py
 """
@@ -22,7 +22,7 @@ def main():
     cfg = get_config("smollm-135m").scaled_down(num_layers=4, d_model=64,
                                                 vocab_size=256)
     model = LM(cfg, dtype=jnp.float32, remat=False)
-    cache = ShardCache(8 << 20, policy="wtlfu-av")
+    cache = ShardCache(8 << 20, policy="wtlfu-av?window_frac=0.02")
     ds = TokenDataset(
         DataConfig(vocab_size=256, seq_len=32, global_batch=4, n_shards=16,
                    shard_tokens_min=1 << 10, shard_tokens_max=1 << 12),

@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Tier-1 verify: one invocation with PYTHONPATH set and slow tests skipped.
+#
+#   scripts/tier1.sh            # the ROADMAP tier-1 command
+#   scripts/tier1.sh tests/test_policies.py -k belady   # extra pytest args
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q -m "not slow" "$@"

@@ -5,10 +5,36 @@ Public surface:
 * :class:`SizeAwareWTinyLFU` — W-TinyLFU with IV / QV / AV size-aware
   admission (the paper, Section 4) over pluggable Main-cache eviction.
 * Baselines: LRU, SampledLFU, GDSF, AdaptSize, LHD, LRB-lite, BeladySize.
-* :func:`make_policy` — name-based factory used by benchmarks, the serving
-  prefix cache and the data-pipeline shard cache.
-* :func:`simulate` / :class:`AccessTrace` / :class:`CacheStats` — the
-  trace-driven evaluation instrument.
+* **Policy registry** — every policy self-registers via
+  :func:`register_policy`; :data:`REGISTRY` builds any policy from a
+  :class:`PolicySpec` or a round-trippable spec string such as
+  ``"wtlfu-av-slru?window_frac=0.05&early_pruning=0"``. Introspection:
+  :func:`available_policies` enumerates spec names (``expand=True`` expands
+  the full W-TinyLFU admission x eviction product) and
+  ``REGISTRY.schema(name)`` exposes per-policy param schemas, so benchmarks
+  enumerate variants instead of hard-coding name lists.
+* :class:`SimulationEngine` — the trace-driven evaluation instrument:
+  streams an :class:`AccessTrace` in chunks (O(chunk) memory), supports
+  warmup, periodic :class:`StatsSnapshot` rows (hit-ratio-over-time), and
+  pluggable :class:`Instrument` hooks (:class:`CapacityInvariant` is one);
+  dispatches to a policy's optional ``access_batch`` fast path —
+  :class:`SizeAwareWTinyLFU` uses it to batch sketch traffic through the
+  Pallas CMS kernels (``sketch_backend="cms"``).
+* Deprecated shims: :func:`make_policy` / :func:`simulate` delegate to the
+  registry / engine so out-of-tree callers keep working.
+
+Defining a new policy (see also ``examples/quickstart.py``)::
+
+    from repro.core import register_policy, CacheStats
+
+    @register_policy("myfifo")
+    class MyFIFO:
+        def __init__(self, capacity: int, *, knob: float = 0.5): ...
+        def access(self, key: int, size: int) -> bool: ...
+        def used_bytes(self) -> int: ...
+        def __contains__(self, key: int) -> bool: ...
+
+    policy = REGISTRY.build("myfifo?knob=0.9", capacity)
 """
 
 from __future__ import annotations
@@ -16,8 +42,23 @@ from __future__ import annotations
 from .baselines import AdaptSizeCache, GDSFCache, LHDCache, LRUCache, SampledLFUCache
 from .belady import BeladySizeCache, belady_boundary
 from .cache_api import AccessTrace, CachePolicy, CacheStats, simulate
+from .engine import (
+    CapacityInvariant,
+    Instrument,
+    SimulationEngine,
+    SimulationResult,
+    StatsSnapshot,
+)
 from .eviction import make_eviction
 from .lrb import LRBLiteCache
+from .registry import (
+    REGISTRY,
+    ParamSchema,
+    PolicyRegistry,
+    PolicySpec,
+    available_policies,
+    register_policy,
+)
 from .sketch import FrequencySketch
 from .tinylfu import ADMISSIONS, EVICTIONS, SizeAwareWTinyLFU
 
@@ -35,6 +76,20 @@ __all__ = [
     "LRBLiteCache",
     "BeladySizeCache",
     "belady_boundary",
+    # registry (spec-driven construction)
+    "REGISTRY",
+    "PolicyRegistry",
+    "PolicySpec",
+    "ParamSchema",
+    "register_policy",
+    "available_policies",
+    # engine (spec-driven evaluation)
+    "SimulationEngine",
+    "SimulationResult",
+    "StatsSnapshot",
+    "Instrument",
+    "CapacityInvariant",
+    # deprecated shims
     "simulate",
     "make_policy",
     "make_eviction",
@@ -43,6 +98,8 @@ __all__ = [
     "POLICY_NAMES",
 ]
 
+#: Canonical paper policy names; ``set(POLICY_NAMES) ==
+#: set(available_policies())`` is asserted in tests.
 POLICY_NAMES = (
     "lru",
     "sampled_lfu",
@@ -59,30 +116,12 @@ POLICY_NAMES = (
 
 
 def make_policy(name: str, capacity: int, **kw):
-    """Instantiate a policy by name.
+    """Deprecated shim over ``REGISTRY.build(PolicySpec.parse(name), ...)``.
 
     W-TinyLFU variants are spelled ``wtlfu-<iv|qv|av>[-<eviction>]`` with
-    eviction defaulting to SLRU (e.g. ``wtlfu-av-sampled_size``). ``belady``
-    requires ``trace=`` (full future knowledge).
+    eviction defaulting to SLRU (e.g. ``wtlfu-av-sampled_size``); ``name``
+    may also be a full spec string (``"wtlfu-av?window_frac=0.05"``).
+    ``belady`` requires ``trace=`` (full future knowledge). New code should
+    call ``REGISTRY.build`` directly.
     """
-    name = name.lower()
-    if name == "lru":
-        return LRUCache(capacity, **kw)
-    if name == "sampled_lfu":
-        return SampledLFUCache(capacity, **kw)
-    if name == "gdsf":
-        return GDSFCache(capacity, **kw)
-    if name == "adaptsize":
-        return AdaptSizeCache(capacity, **kw)
-    if name == "lhd":
-        return LHDCache(capacity, **kw)
-    if name == "lrb":
-        return LRBLiteCache(capacity, **kw)
-    if name == "belady":
-        return BeladySizeCache(capacity, **kw)
-    if name.startswith("wtlfu-"):
-        parts = name.split("-", 2)
-        admission = parts[1]
-        eviction = parts[2] if len(parts) > 2 else "slru"
-        return SizeAwareWTinyLFU(capacity, admission=admission, eviction=eviction, **kw)
-    raise ValueError(f"unknown policy {name!r}")
+    return REGISTRY.build(name, capacity, **kw)

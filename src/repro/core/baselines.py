@@ -25,10 +25,12 @@ import random
 from collections import OrderedDict
 
 from .cache_api import CacheStats
+from .registry import register_policy
 
 __all__ = ["LRUCache", "SampledLFUCache", "GDSFCache", "AdaptSizeCache", "LHDCache"]
 
 
+@register_policy("lru")
 class LRUCache:
     """Plain size-aware LRU with blind admission."""
 
@@ -67,6 +69,7 @@ class LRUCache:
         return False
 
 
+@register_policy("sampled_lfu")
 class SampledLFUCache:
     """Redis-style sampled LFU: sample 5, evict the least-frequent."""
 
@@ -124,6 +127,7 @@ class SampledLFUCache:
         return False
 
 
+@register_policy("gdsf")
 class GDSFCache:
     """Greedy-Dual-Size-Frequency: priority = L + freq/size, lazy-deletion heap."""
 
@@ -184,6 +188,7 @@ class GDSFCache:
         return False
 
 
+@register_policy("adaptsize")
 class AdaptSizeCache:
     """AdaptSize: exp(-size/c) probabilistic admission + LRU, with tuned c.
 
@@ -320,6 +325,7 @@ class AdaptSizeCache:
         return False
 
 
+@register_policy("lhd")
 class LHDCache:
     """LHD: sample 64, evict lowest hit-density = E[hits] / (size · E[lifetime]).
 

@@ -20,6 +20,7 @@ import heapq
 import numpy as np
 
 from .cache_api import AccessTrace, CacheStats
+from .registry import register_policy
 
 __all__ = ["next_access_index", "BeladySizeCache", "belady_boundary"]
 
@@ -52,6 +53,7 @@ def belady_boundary(trace: AccessTrace, capacity: int) -> int:
     return int(np.quantile(dists, frac)) if frac < 1.0 else int(dists.max())
 
 
+@register_policy("belady")
 class BeladySizeCache:
     """Farthest-next-access eviction with full future knowledge.
 

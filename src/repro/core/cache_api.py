@@ -1,16 +1,16 @@
-"""Cache policy API and trace-driven simulation loop.
+"""Core cache policy API: traces, stats, and the policy protocol.
 
-This module is the evaluation instrument of the paper (Section 5): every
-policy implements :class:`CachePolicy` and is driven by :func:`simulate`
-over a trace of ``(key, size)`` accesses, producing hit-ratio,
-byte-hit-ratio and CPU-overhead statistics.
+Every policy implements :class:`CachePolicy` and is driven over a trace of
+``(key, size)`` accesses by :class:`repro.core.engine.SimulationEngine`,
+producing hit-ratio, byte-hit-ratio and CPU-overhead statistics (the
+paper's Section 5 instrument). The legacy :func:`simulate` free function
+remains as a thin deprecated shim over the engine.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Iterable, Protocol, Sequence
+from typing import Iterable, Iterator, Protocol
 
 import numpy as np
 
@@ -54,6 +54,16 @@ class AccessTrace:
 
     def slice(self, n: int) -> "AccessTrace":
         return AccessTrace(self.name, self.keys[:n], self.sizes[:n])
+
+    def iter_chunks(self, chunk_size: int) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+        """Stream ``(keys, sizes)`` array views of at most ``chunk_size``
+        accesses — O(chunk) memory regardless of trace length."""
+        if chunk_size <= 0:
+            raise ValueError("chunk_size must be positive")
+        n = len(self)
+        for lo in range(0, n, chunk_size):
+            hi = min(lo + chunk_size, n)
+            yield self.keys[lo:hi], self.sizes[lo:hi]
 
 
 @dataclasses.dataclass
@@ -100,6 +110,14 @@ class CachePolicy(Protocol):
 
     ``access`` is the single hot-path entry point: record an access to
     ``key`` of ``size`` bytes and return True on a cache hit.
+
+    Policies may additionally define an *optional* ``access_batch(keys,
+    sizes) -> bool ndarray`` fast path (deliberately not part of this
+    protocol — the engine probes for it and falls back to a scalar loop):
+    drive a whole chunk of parallel key/size arrays and return a hit mask.
+    Implementations must be observationally identical to the scalar loop —
+    the method exists so policies can amortize per-access overhead (e.g.
+    W-TinyLFU batching its sketch traffic through the Pallas CMS kernels).
     """
 
     capacity: int
@@ -122,35 +140,17 @@ def simulate(
     limit: int | None = None,
     check_invariants: bool = False,
 ) -> CacheStats:
-    """Drive ``policy`` over ``trace``; returns the policy's stats object.
+    """Deprecated shim over :class:`repro.core.engine.SimulationEngine`.
 
-    ``check_invariants`` additionally asserts after every access that the
-    policy never exceeds its capacity (used by property tests).
+    Drives ``policy`` over ``trace`` and returns the policy's stats object;
+    ``check_invariants`` installs the :class:`CapacityInvariant` instrument
+    (per-access capacity assertion, as before). New code should construct a
+    ``SimulationEngine`` directly (chunked streaming, warmup, snapshots,
+    instruments).
     """
-    if isinstance(trace, AccessTrace):
-        keys = trace.keys.tolist()
-        sizes = trace.sizes.tolist()
-        pairs: Sequence[tuple[int, int]] = list(zip(keys, sizes))
-    else:
-        pairs = list(trace)
-    if limit is not None:
-        pairs = pairs[:limit]
+    from .engine import CapacityInvariant, SimulationEngine
 
-    stats = policy.stats
-    access = policy.access
-    t0 = time.perf_counter()
-    if check_invariants:
-        cap = policy.capacity
-        for key, size in pairs:
-            access(key, size)
-            used = policy.used_bytes()
-            if used > cap:
-                raise AssertionError(
-                    f"capacity invariant violated: used={used} > cap={cap} "
-                    f"after access ({key}, {size})"
-                )
-    else:
-        for key, size in pairs:
-            access(key, size)
-    stats.wall_seconds += time.perf_counter() - t0
-    return stats
+    engine = SimulationEngine(
+        instruments=(CapacityInvariant(),) if check_invariants else (),
+    )
+    return engine.run(policy, trace, limit=limit).stats

@@ -23,6 +23,7 @@ import random
 from collections import deque
 
 from .cache_api import CacheStats
+from .registry import register_policy
 
 __all__ = ["LRBLiteCache"]
 
@@ -30,6 +31,7 @@ _N_DELTAS = 4
 _N_FEATS = _N_DELTAS + 3  # deltas, log size, log freq, age  (+ bias in w[0])
 
 
+@register_policy("lrb")
 class LRBLiteCache:
     SAMPLE = 64
 

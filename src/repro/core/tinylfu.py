@@ -28,8 +28,11 @@ from __future__ import annotations
 
 from collections import OrderedDict
 
+import numpy as np
+
 from .cache_api import CacheStats
 from .eviction import EvictionPolicy, make_eviction
+from .registry import register_policy
 from .sketch import FrequencySketch
 
 __all__ = ["SizeAwareWTinyLFU", "ADMISSIONS", "EVICTIONS"]
@@ -45,7 +48,36 @@ EVICTIONS = (
     "random",
 )
 
+SKETCH_BACKENDS = ("host", "cms")
 
+
+def _wtlfu_alias(name: str) -> dict | None:
+    """Map ``wtlfu-<admission>[-<eviction>]`` spec names onto constructor
+    params (the registry's family resolver)."""
+    if not name.startswith("wtlfu-"):
+        return None
+    parts = name.split("-", 2)
+    if parts[1] not in ADMISSIONS:
+        return None
+    implied = {"admission": parts[1]}
+    if len(parts) > 2:
+        implied["eviction"] = parts[2]
+    return implied
+
+
+def _wtlfu_variants() -> tuple[str, ...]:
+    """Full admission x eviction product for benchmark sweeps."""
+    out = [f"wtlfu-{a}" for a in ADMISSIONS]
+    out.extend(f"wtlfu-{a}-{e}" for a in ADMISSIONS for e in EVICTIONS)
+    return tuple(out)
+
+
+@register_policy(
+    "wtlfu",
+    alias_fn=_wtlfu_alias,
+    variants=tuple(f"wtlfu-{a}" for a in ADMISSIONS),
+    expand_fn=_wtlfu_variants,
+)
 class SizeAwareWTinyLFU:
     """W-TinyLFU extended to variable object sizes.
 
@@ -57,6 +89,10 @@ class SizeAwareWTinyLFU:
     window_frac: Window share of ``capacity`` (paper uses 1%).
     expected_entries: sketch sizing hint (≈ capacity / mean object size).
     early_pruning: AV's early-pruning optimization (Alg. 4 lines 6-7).
+    sketch_backend: ``"host"`` (pure-Python sketch) or ``"cms"`` (batched
+        Pallas count-min-sketch kernels; increments are buffered and
+        flushed lazily before estimates, which is exactly equivalent to
+        scalar driving — see :mod:`repro.core.cms_sketch`).
     """
 
     def __init__(
@@ -70,10 +106,13 @@ class SizeAwareWTinyLFU:
         early_pruning: bool = True,
         adaptive_window: bool = False,
         seed: int = 0x5EED,
+        sketch_backend: str = "host",
         sketch_kwargs: dict | None = None,
     ):
         if admission not in ADMISSIONS:
             raise ValueError(f"admission must be one of {ADMISSIONS}")
+        if sketch_backend not in SKETCH_BACKENDS:
+            raise ValueError(f"sketch_backend must be one of {SKETCH_BACKENDS}")
         self.capacity = int(capacity)
         self.window_cap = max(1, int(capacity * window_frac))
         self.main_cap = self.capacity - self.window_cap
@@ -90,7 +129,13 @@ class SizeAwareWTinyLFU:
         self._adapt_dir = 1
         if expected_entries is None:
             expected_entries = max(64, self.capacity // 4096)
-        self.sketch = FrequencySketch(expected_entries, **(sketch_kwargs or {}))
+        if sketch_backend == "cms":
+            from .cms_sketch import CMSSketch
+
+            self.sketch = CMSSketch(expected_entries, **(sketch_kwargs or {}))
+        else:
+            self.sketch = FrequencySketch(expected_entries, **(sketch_kwargs or {}))
+        self.sketch_backend = sketch_backend
 
         # Window: plain LRU over (key -> size).
         self.window: OrderedDict[int, int] = OrderedDict()
@@ -128,6 +173,47 @@ class SizeAwareWTinyLFU:
         if self.adaptive_window:
             self._maybe_adapt()
         return False
+
+    def access_batch(self, keys, sizes) -> np.ndarray:
+        """Chunked fast path: drive a parallel key/size array pair.
+
+        Observationally identical to calling :meth:`access` per element
+        (asserted by tests): the loop body is the same state machine with
+        hot attributes hoisted out, and with the ``cms`` sketch backend the
+        per-access increments are buffered and flushed through one batched
+        Pallas kernel call right before the next admission decision.
+        """
+        n = len(keys)
+        hits = np.empty(n, dtype=bool)
+        keys = keys.tolist() if hasattr(keys, "tolist") else list(keys)
+        sizes = sizes.tolist() if hasattr(sizes, "tolist") else list(sizes)
+        st = self.stats
+        window = self.window
+        main = self.main
+        increment = self.sketch.increment
+        adaptive = self.adaptive_window
+        for i in range(n):
+            key = keys[i]
+            size = sizes[i]
+            st.accesses += 1
+            st.bytes_requested += size
+            increment(key)
+            if key in window:
+                window.move_to_end(key)
+                st.hits += 1
+                st.bytes_hit += size
+                hits[i] = True
+            elif key in main:
+                main.on_access(key)
+                st.hits += 1
+                st.bytes_hit += size
+                hits[i] = True
+            else:
+                hits[i] = False
+                self._on_miss(key, size)
+                if adaptive:
+                    self._maybe_adapt()
+        return hits
 
     # -- adaptive window (paper ref [19]; Caffeine's climber) ---------------
     def _maybe_adapt(self) -> None:
@@ -244,6 +330,13 @@ class SizeAwareWTinyLFU:
     # -- Algorithm 4: Aggregated Victims (this paper) ------------------------
     def _admit_av(self, key: int, size: int, needed: int) -> None:
         st = self.stats
+        estimate_batch = getattr(self.sketch, "estimate_batch", None)
+        if estimate_batch is not None and not self.early_pruning:
+            # Without early pruning the victim set depends only on sizes, so
+            # it can be gathered first and the candidate + all victims scored
+            # in ONE batched kernel call (same decisions, fewer sketch trips).
+            self._admit_av_batched(key, size, needed, estimate_batch)
+            return
         estimate = self.sketch.estimate
         cand_f = estimate(key)
         victims: list[int] = []
@@ -271,5 +364,35 @@ class SizeAwareWTinyLFU:
             st.admissions += 1
         else:
             for v in victims:  # lines 13-14
+                self.main.promote(v)
+            st.rejections += 1
+
+    def _admit_av_batched(self, key: int, size: int, needed: int, estimate_batch) -> None:
+        """AV without early pruning, scoring candidate + victim set in one
+        batched sketch estimate. Decision-identical to the scalar walk."""
+        st = self.stats
+        victims: list[int] = []
+        vbytes = 0
+        it = self.main.iter_victims(needed)
+        exhausted = False
+        while vbytes < needed:
+            v = next(it, None)
+            if v is None:  # cannot free enough (shouldn't happen: size<=main_cap)
+                exhausted = True
+                break
+            victims.append(v)
+            vbytes += self.main.sizes[v]
+            st.victims_examined += 1
+        freqs = estimate_batch(np.asarray([key] + victims, dtype=np.int64))
+        cand_f = int(freqs[0])
+        vfreq = int(freqs[1:].sum())
+        if not exhausted and cand_f >= vfreq:
+            for v in victims:
+                self.main.evict(v)
+                st.evictions += 1
+            self.main.insert(key, size)
+            st.admissions += 1
+        else:
+            for v in victims:
                 self.main.promote(v)
             st.rejections += 1

@@ -25,7 +25,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any
 
-from repro.core import make_policy
+from repro.core import REGISTRY, PolicySpec
 
 from .kvcache import BlockPool, block_hashes
 
@@ -54,7 +54,7 @@ class PrefixCacheConfig:
     capacity_bytes: int
     block_size: int = 16  # tokens per block
     bytes_per_token: int = 2 * 32 * 128 * 2  # overridden per arch
-    policy: str = "wtlfu-av"  # any repro.core.make_policy name
+    policy: str = "wtlfu-av"  # any repro.core registry spec string
     policy_kwargs: dict | None = None
 
 
@@ -74,10 +74,15 @@ class PrefixCache:
         num_blocks = max(1, config.capacity_bytes // block_bytes)
         self.pool = BlockPool(num_blocks)
         self.block_bytes = block_bytes
+        spec = PolicySpec.parse(config.policy)
         kw = dict(config.policy_kwargs or {})
-        if "wtlfu" in config.policy and "expected_entries" not in kw:
+        if (
+            spec.name.startswith("wtlfu")
+            and "expected_entries" not in kw
+            and "expected_entries" not in spec.params_dict
+        ):
             kw["expected_entries"] = max(64, num_blocks)
-        self.policy = make_policy(config.policy, config.capacity_bytes, **kw)
+        self.policy = REGISTRY.build(spec, config.capacity_bytes, **kw)
         self.entries: dict[int, _Entry] = {}
         self.by_hash: dict[int, list[int]] = {}  # block hash -> entry keys
         # serving metrics (paper analogs)

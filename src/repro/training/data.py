@@ -13,7 +13,7 @@ import zlib
 
 import numpy as np
 
-from repro.core import make_policy
+from repro.core import REGISTRY, PolicySpec
 
 __all__ = ["DataConfig", "ShardCache", "TokenDataset"]
 
@@ -33,8 +33,13 @@ class ShardCache:
     """In-memory cache of decompressed shards, paper-policy managed."""
 
     def __init__(self, capacity_bytes: int, policy: str = "wtlfu-av"):
-        kw = {"expected_entries": 256} if "wtlfu" in policy else {}
-        self.policy = make_policy(policy, capacity_bytes, **kw)
+        spec = PolicySpec.parse(policy)
+        kw = (
+            {"expected_entries": 256}
+            if spec.name.startswith("wtlfu") and "expected_entries" not in spec.params_dict
+            else {}
+        )
+        self.policy = REGISTRY.build(spec, capacity_bytes, **kw)
         self.store: dict[int, np.ndarray] = {}
         self.fetches = 0
 

@@ -8,8 +8,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import AccessTrace, SizeAwareWTinyLFU, simulate
 from repro.traces import make_trace

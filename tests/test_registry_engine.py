@@ -1,0 +1,306 @@
+"""Tests for the policy registry (spec-driven construction) and the
+spec-driven, batched SimulationEngine."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    POLICY_NAMES,
+    REGISTRY,
+    AccessTrace,
+    CacheStats,
+    CapacityInvariant,
+    Instrument,
+    PolicySpec,
+    SimulationEngine,
+    available_policies,
+    make_policy,
+    simulate,
+)
+from repro.traces import make_trace
+
+
+def _trace(scale=0.01, name="msr2", seed=0):
+    return make_trace(name, seed=seed, scale=scale)
+
+
+# -- PolicySpec --------------------------------------------------------------
+class TestPolicySpec:
+    @pytest.mark.parametrize(
+        "text",
+        [
+            "lru",
+            "wtlfu-av",
+            "wtlfu-av-slru?window_frac=0.05&early_pruning=0",
+            "adaptsize?c_init=1000.0&reconf_every=50000",
+            "wtlfu-qv?eviction=sampled_size&seed=7",
+        ],
+    )
+    def test_round_trip(self, text):
+        spec = PolicySpec.parse(text)
+        assert PolicySpec.parse(spec.to_string()) == spec
+
+    def test_param_order_insensitive(self):
+        a = PolicySpec.parse("wtlfu-av?window_frac=0.05&early_pruning=0")
+        b = PolicySpec.parse("wtlfu-av?early_pruning=0&window_frac=0.05")
+        assert a == b and a.to_string() == b.to_string()
+
+    def test_make_equals_parse(self):
+        assert PolicySpec.make("lru") == PolicySpec.parse("lru")
+        assert (
+            PolicySpec.make("wtlfu-av", window_frac=0.05).to_string()
+            == "wtlfu-av?window_frac=0.05"
+        )
+
+    def test_values_are_literal_parsed(self):
+        spec = PolicySpec.parse("x?a=3&b=0.5&c=hello")
+        assert spec.params_dict == {"a": 3, "b": 0.5, "c": "hello"}
+
+    @pytest.mark.parametrize(
+        "bad", ["", "?a=1", "lru?", "lru?a", "lru?=1", "lru?a=1&a=2"]
+    )
+    def test_malformed_specs_raise(self, bad):
+        with pytest.raises(ValueError):
+            PolicySpec.parse(bad)
+
+
+# -- PolicyRegistry ----------------------------------------------------------
+class TestRegistry:
+    def test_enumeration_matches_policy_names(self):
+        assert set(available_policies()) == set(POLICY_NAMES)
+
+    def test_expanded_enumeration_covers_wtlfu_product(self):
+        expanded = available_policies(expand=True)
+        from repro.core.tinylfu import ADMISSIONS, EVICTIONS
+
+        for adm in ADMISSIONS:
+            for ev in EVICTIONS:
+                assert f"wtlfu-{adm}-{ev}" in expanded
+
+    @pytest.mark.parametrize("name", POLICY_NAMES)
+    def test_every_policy_name_builds(self, name):
+        tr = AccessTrace("t", np.arange(10, dtype=np.int64),
+                         np.full(10, 5, dtype=np.int64))
+        kw = {"trace": tr} if name == "belady" else {}
+        policy = REGISTRY.build(PolicySpec.parse(name), 1000, **kw)
+        assert policy.capacity == 1000
+        assert name in REGISTRY
+
+    def test_spec_params_are_type_coerced(self):
+        p = REGISTRY.build("wtlfu-av?early_pruning=0&window_frac=0.2", 1000,
+                           expected_entries=32)
+        assert p.early_pruning is False
+        assert p.window_cap == 200
+
+    def test_family_alias_maps_eviction(self):
+        p = REGISTRY.build("wtlfu-qv-sampled_size", 1000, expected_entries=32)
+        assert p.admission == "qv"
+        from repro.core.eviction import SampledEviction
+
+        assert isinstance(p.main, SampledEviction) and p.main.rule == "size"
+
+    def test_unknown_policy_raises(self):
+        with pytest.raises(ValueError, match="unknown policy"):
+            REGISTRY.build("clockpro", 10)
+
+    def test_unknown_param_raises(self):
+        with pytest.raises(ValueError, match="unknown param"):
+            REGISTRY.build("lru?bogus=1", 10)
+
+    def test_name_implied_param_conflict_raises(self):
+        with pytest.raises(ValueError, match="implied by the policy name"):
+            REGISTRY.build("wtlfu-av?admission=qv", 1000, expected_entries=32)
+
+    def test_schema_exposes_typed_params(self):
+        schema = REGISTRY.schema("wtlfu-av")
+        assert schema["window_frac"].kind is float
+        assert schema["early_pruning"].kind is bool
+        assert schema["early_pruning"].default is True
+        assert REGISTRY.schema("lru") == {}
+
+    def test_spec_expected_entries_not_clobbered(self):
+        """Helpers that inject a default expected_entries must honor a
+        spec-string-provided value (sketch-sizing sweeps via specs)."""
+        p = REGISTRY.build("wtlfu-av?expected_entries=32", 10_000)
+        assert p.sketch.width == 32
+        from repro.training.data import ShardCache
+
+        cache = ShardCache(1 << 20, policy="wtlfu-av?expected_entries=64")
+        assert cache.policy.sketch.width == 64
+
+    def test_make_policy_shim(self):
+        p = make_policy("wtlfu-av-sampled_size", 1000, expected_entries=32)
+        assert p.admission == "av"
+        with pytest.raises(ValueError):
+            make_policy("clockpro", 10)
+
+
+# -- SimulationEngine --------------------------------------------------------
+class TestEngine:
+    def test_streams_chunks_without_materializing(self):
+        tr = _trace()
+        chunks = list(tr.iter_chunks(1000))
+        assert sum(len(k) for k, _ in chunks) == len(tr)
+        assert all(len(k) <= 1000 for k, _ in chunks)
+        # chunked result identical to the old whole-trace loop
+        a = REGISTRY.build("lru", 100_000)
+        b = REGISTRY.build("lru", 100_000)
+        SimulationEngine(chunk_size=257).run(a, tr)
+        for k, s in zip(tr.keys.tolist(), tr.sizes.tolist()):
+            b.access(k, s)
+        assert a.stats.hits == b.stats.hits
+        assert a.stats.bytes_hit == b.stats.bytes_hit
+
+    def test_accepts_pair_iterables(self):
+        pairs = [(1, 10), (2, 20), (1, 10), (3, 30)]
+        p = REGISTRY.build("lru", 100)
+        st = SimulationEngine(chunk_size=2).run(p, iter(pairs)).stats
+        assert st.accesses == 4 and st.hits == 1
+
+    def test_limit(self):
+        tr = _trace()
+        p = REGISTRY.build("lru", 100_000)
+        st = SimulationEngine().run(p, tr, limit=500).stats
+        assert st.accesses == 500
+
+    def test_warmup_excluded_from_stats(self):
+        tr = _trace()
+        p = REGISTRY.build("lru", 100_000)
+        res = SimulationEngine(warmup=2000).run(p, tr)
+        assert res.warmup_stats.accesses == 2000
+        assert res.stats.accesses == len(tr) - 2000
+        assert p.stats is res.stats
+        # wall time is split at the warmup boundary, not double-charged
+        assert res.warmup_stats.wall_seconds > 0
+        total = res.warmup_stats.wall_seconds + res.stats.wall_seconds
+        assert abs(total - res.wall_seconds) < 1e-6
+
+    def test_snapshot_cadence(self):
+        tr = _trace()
+        res = SimulationEngine(chunk_size=700, snapshot_every=1500).run(
+            REGISTRY.build("lru", 100_000), tr
+        )
+        expected = [1500 * (i + 1) for i in range(len(tr) // 1500)]
+        assert [s.accesses for s in res.snapshots] == expected
+        last = res.snapshots[-1]
+        assert last.hit_ratio == last.hits / last.accesses
+
+    def test_instrument_hooks_fire(self):
+        calls = {"start": 0, "access": 0, "chunk": 0, "snapshot": 0, "end": 0}
+
+        class Spy(Instrument):
+            def on_run_start(self, policy):
+                calls["start"] += 1
+
+            def on_access(self, policy, key, size, hit):
+                calls["access"] += 1
+
+            def on_chunk(self, policy, keys, sizes, hits):
+                calls["chunk"] += 1
+
+            def on_snapshot(self, policy, snapshot):
+                calls["snapshot"] += 1
+
+            def on_run_end(self, policy, stats):
+                calls["end"] += 1
+
+        tr = _trace().slice(4000)
+        SimulationEngine(chunk_size=1000, snapshot_every=2000,
+                         instruments=(Spy(),)).run(REGISTRY.build("lru", 100_000), tr)
+        assert calls == {"start": 1, "access": 4000, "chunk": 4, "snapshot": 2, "end": 1}
+
+    def test_capacity_invariant_catches_violation(self):
+        class Broken:
+            capacity = 10
+
+            def __init__(self):
+                self.stats = CacheStats()
+                self.used = 0
+
+            def access(self, key, size):
+                self.stats.accesses += 1
+                self.used += size  # never evicts
+                return False
+
+            def used_bytes(self):
+                return self.used
+
+            def __contains__(self, key):
+                return False
+
+        with pytest.raises(AssertionError, match="capacity invariant"):
+            SimulationEngine(instruments=(CapacityInvariant(),)).run(
+                Broken(), [(1, 6), (2, 6)]
+            )
+
+    def test_use_batch_true_requires_fast_path(self):
+        with pytest.raises(ValueError, match="access_batch"):
+            SimulationEngine(use_batch=True).run(REGISTRY.build("lru", 100), [(1, 1)])
+
+    def test_simulate_shim_matches_engine(self):
+        tr = _trace()
+        a = REGISTRY.build("gdsf", 100_000)
+        b = REGISTRY.build("gdsf", 100_000)
+        sa = simulate(a, tr)
+        sb = SimulationEngine().run(b, tr).stats
+        assert (sa.hits, sa.bytes_hit) == (sb.hits, sb.bytes_hit)
+
+
+# -- access_batch fast path --------------------------------------------------
+class TestAccessBatch:
+    def test_wtlfu_batch_identical_to_scalar_100k(self):
+        """Acceptance: identical hit/byte-hit stats on a 100k-access trace."""
+        tr = make_trace("msr2", seed=1, scale=0.12)  # ~108k accesses
+        assert len(tr) >= 100_000
+        cap = int(tr.total_object_bytes * 0.02)
+        kw = dict(expected_entries=max(64, int(cap / tr.mean_object_size)))
+        scalar = REGISTRY.build("wtlfu-av", cap, **kw)
+        batch = REGISTRY.build("wtlfu-av", cap, **kw)
+        rs = SimulationEngine(use_batch=False).run(scalar, tr)
+        rb = SimulationEngine(use_batch=True).run(batch, tr)
+        assert rb.used_batch and not rs.used_batch
+        assert rs.stats.hits == rb.stats.hits
+        assert rs.stats.bytes_hit == rb.stats.bytes_hit
+        assert rs.stats.evictions == rb.stats.evictions
+        assert rs.stats.victims_examined == rb.stats.victims_examined
+
+    @pytest.mark.parametrize("spec", ["wtlfu-av", "wtlfu-qv", "wtlfu-iv",
+                                      "wtlfu-av?early_pruning=0"])
+    def test_cms_backend_batch_identical_to_scalar(self, spec):
+        """With the CMS kernel sketch, buffered batch flushing must be
+        byte-identical to scalar driving (increments commute; flushes land
+        before every estimate)."""
+        tr = make_trace("msr2", seed=2, scale=0.0015)  # ~1.3k accesses
+        cap = int(tr.total_object_bytes * 0.02)
+        kw = dict(expected_entries=128, sketch_backend="cms")
+        scalar = REGISTRY.build(spec, cap, **kw)
+        batch = REGISTRY.build(spec, cap, **kw)
+        ss = SimulationEngine(use_batch=False).run(scalar, tr).stats
+        sb = SimulationEngine(use_batch=True).run(batch, tr).stats
+        assert (ss.hits, ss.bytes_hit, ss.evictions) == (sb.hits, sb.bytes_hit, sb.evictions)
+
+    @pytest.mark.slow
+    def test_cms_pallas_interpret_matches_ref(self):
+        """The Pallas kernel path (interpret mode on CPU) and the jnp
+        reference produce identical policy decisions."""
+        tr = make_trace("msr2", seed=3, scale=0.0015).slice(200)
+        cap = int(tr.total_object_bytes * 0.05)
+        results = []
+        for use_pallas in (True, False):
+            p = REGISTRY.build(
+                "wtlfu-av", cap, expected_entries=128, sketch_backend="cms",
+                sketch_kwargs={"use_pallas": use_pallas},
+            )
+            st = SimulationEngine(use_batch=True).run(p, tr).stats
+            results.append((st.hits, st.bytes_hit, st.evictions))
+        assert results[0] == results[1]
+
+    def test_engine_auto_uses_batch_only_without_per_access_instruments(self):
+        tr = _trace().slice(2000)
+        p = REGISTRY.build("wtlfu-av", 100_000, expected_entries=64)
+        res = SimulationEngine().run(p, tr)
+        assert res.used_batch
+        p2 = REGISTRY.build("wtlfu-av", 100_000, expected_entries=64)
+        res2 = SimulationEngine(instruments=(CapacityInvariant(),)).run(p2, tr)
+        assert not res2.used_batch
+        assert res.stats.hits == res2.stats.hits

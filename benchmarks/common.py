@@ -33,11 +33,14 @@ def get_trace(name: str, seed: int = 0):
     return make_trace(name, seed=seed, scale=bench_scale())
 
 
-def run_policy(name: "str | PolicySpec", trace, cap: int, *, engine: SimulationEngine | None = None, **kw) -> dict:
+def run_policy(name: "str | PolicySpec", trace, cap: int, *, engine: SimulationEngine | None = None,
+               with_snapshots: bool = False, **kw) -> dict:
     """Drive one policy spec over one trace; returns a result row.
 
     ``name`` is any registry spec (``"wtlfu-av?early_pruning=0"``); ``kw``
     carries build-time objects (``trace=`` for belady is added here).
+    ``with_snapshots`` adds the engine's ``StatsSnapshot`` rows (the engine
+    must be constructed with ``snapshot_every=``) as a ``"snapshots"`` list.
     """
     spec = PolicySpec.parse(name)
     if (
@@ -50,9 +53,10 @@ def run_policy(name: "str | PolicySpec", trace, cap: int, *, engine: SimulationE
         kw["trace"] = trace
     policy = REGISTRY.build(spec, cap, **kw)
     t0 = time.perf_counter()
-    st = (engine or SimulationEngine()).run(policy, trace).stats
+    result = (engine or SimulationEngine()).run(policy, trace)
+    st = result.stats
     wall = time.perf_counter() - t0
-    return {
+    row = {
         "policy": spec.to_string(),
         "trace": trace.name,
         "capacity": cap,
@@ -63,7 +67,21 @@ def run_policy(name: "str | PolicySpec", trace, cap: int, *, engine: SimulationE
         "used_frac": round(policy.used_bytes() / cap, 5),
         "us_per_access": round(wall / max(1, st.accesses) * 1e6, 3),
         "wall_s": round(wall, 3),
+        "used_batch": result.used_batch,
     }
+    if with_snapshots:
+        row["snapshots"] = [
+            {
+                "accesses": s.accesses,
+                "hit_ratio": round(s.hit_ratio, 5),
+                "byte_hit_ratio": round(s.byte_hit_ratio, 5),
+                "interval_hit_ratio": round(s.interval_hit_ratio, 5),
+                "used_bytes": s.used_bytes,
+                "evictions": s.evictions,
+            }
+            for s in result.snapshots
+        ]
+    return row
 
 
 def emit(bench: str, rows: list[dict], derived_key: str = "hit_ratio") -> None:

@@ -2,14 +2,68 @@
 
 Per the paper's method, the LRU wall-time in the same framework is subtracted
 from each policy's wall-time to isolate *policy* overhead from simulation
-plumbing; we report both raw us/access and LRU-subtracted overhead."""
+plumbing; we report both raw us/access and LRU-subtracted overhead.
+
+Two extra comparisons track the admission data plane release over release
+in ``BENCH_overhead.json``:
+
+* **Policy level** — every W-TinyLFU policy runs under both admission data
+  planes: ``data_plane=scalar`` (the reference per-victim walk) vs
+  ``data_plane=batched`` (one ``estimate_batch`` call over the lazily
+  gathered victim prefix). Decisions are byte-identical
+  (``hit_ratio_matches_batched`` asserts it), so any delta is pure
+  data-plane throughput. On the host sketch the scalar walk is the
+  lightweight option (which is why ``auto`` picks it there); the batched
+  rows quantify the abstraction cost. ``batched_speedup`` = scalar
+  us/access ÷ batched us/access.
+* **Sketch level** — the CMS-kernel backend scoring one N-key victim set:
+  one batched ``estimate_batch`` call vs N scalar ``estimate`` calls. This
+  is the data plane the batching is built for (one kernel dispatch instead
+  of N); ``batched_speedup`` here is the headline batching win.
+"""
 
 from __future__ import annotations
+
+import time
 
 from .common import PAPER_TRACES, emit, get_trace, run_policy
 
 POLICIES = ("lru", "wtlfu-av", "wtlfu-qv", "wtlfu-iv", "gdsf", "adaptsize", "lhd", "lrb")
 FRACS = (0.001, 0.01, 0.1)
+#: Policies run under both admission data planes (scalar vs batched).
+DATA_PLANE_POLICIES = ("wtlfu-av", "wtlfu-qv", "wtlfu-iv")
+#: Victim-set sizes for the sketch-level data-plane comparison.
+SKETCH_BATCH_SIZES = (8, 32, 128)
+
+
+def sketch_data_plane_rows(batch_sizes=SKETCH_BATCH_SIZES, repeats: int = 30) -> list[dict]:
+    """CMS backend: one batched estimate_batch(N keys) vs N estimate calls."""
+    from repro.core.cms_sketch import CMSSketch
+
+    rows = []
+    for n in batch_sizes:
+        sk = CMSSketch(1024)
+        keys = list(range(n))
+        sk.increment_batch(keys)
+        sk.flush()
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            sk.estimate_batch(keys)
+        batched_us = (time.perf_counter() - t0) / repeats * 1e6
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            for k in keys:
+                sk.estimate(k)
+        scalar_us = (time.perf_counter() - t0) / repeats * 1e6
+        rows.append({
+            "label": f"cms_sketch_score_victims_n{n}",
+            "batch_size": n,
+            "us_per_access": round(batched_us, 1),  # one batched call
+            "scalar_us": round(scalar_us, 1),  # n scalar calls
+            "batched_speedup": round(scalar_us / max(1e-9, batched_us), 2),
+            "data_plane": "batched_vs_scalar",
+        })
+    return rows
 
 
 def main(traces=PAPER_TRACES, fracs=FRACS) -> list[dict]:
@@ -26,6 +80,26 @@ def main(traces=PAPER_TRACES, fracs=FRACS) -> list[dict]:
                 r["overhead_us"] = round(max(0.0, r["us_per_access"] - lru_us), 3)
                 r["frac"] = frac
                 rows.append(r)
+                if pol in DATA_PLANE_POLICIES:
+                    # Same policy under each admission data plane:
+                    # byte-identical decisions, pure throughput delta.
+                    pair = {}
+                    for plane in ("batched", "scalar"):
+                        rp = run_policy(f"{pol}?data_plane={plane}", tr, cap)
+                        rp["overhead_us"] = round(max(0.0, rp["us_per_access"] - lru_us), 3)
+                        rp["frac"] = frac
+                        rp["data_plane"] = plane
+                        pair[plane] = rp
+                        rows.append(rp)
+                    pair["scalar"]["hit_ratio_matches_batched"] = (
+                        pair["scalar"]["hit_ratio"] == pair["batched"]["hit_ratio"]
+                    )
+                    pair["batched"]["batched_speedup"] = round(
+                        pair["scalar"]["us_per_access"]
+                        / max(1e-9, pair["batched"]["us_per_access"]),
+                        3,
+                    )
+    rows.extend(sketch_data_plane_rows())
     emit("overhead", rows, derived_key="overhead_us")
     return rows
 

@@ -1,0 +1,51 @@
+"""Paper Figs. 11-12: robustness — hit-ratio-over-time curves.
+
+The paper's robustness argument is that size-aware W-TinyLFU tracks the
+best policy *throughout* a trace, not just on the end-to-end average, while
+heavyweight adaptive policies (AdaptSize's Markov reconfiguration, LHD's
+ranked sampling) can lag behind workload shifts. This benchmark drives each
+policy with the engine's periodic :class:`StatsSnapshot` rows and emits one
+row per (trace, policy) holding the whole curve: cumulative and
+per-interval hit ratio every ``SNAPSHOT_POINTS``-th of the trace.
+
+JSON lands in ``benchmarks/results/robustness.json``; each row's
+``snapshots`` list is directly plottable as Fig. 11/12-style curves
+(x = accesses, y = interval_hit_ratio).
+"""
+
+from __future__ import annotations
+
+from repro.core import SimulationEngine
+
+from .common import PAPER_TRACES, emit, get_trace, run_policy
+
+POLICIES = ("wtlfu-av", "wtlfu-qv", "wtlfu-iv", "lru", "gdsf", "adaptsize", "lhd")
+FRACS = (0.01, 0.1)
+SNAPSHOT_POINTS = 20  # snapshots per run
+
+
+def main(traces=PAPER_TRACES, fracs=FRACS, policies=POLICIES) -> list[dict]:
+    rows = []
+    for tname in traces:
+        tr = get_trace(tname)
+        snapshot_every = max(1, len(tr) // SNAPSHOT_POINTS)
+        for frac in fracs:
+            cap = max(1, int(tr.total_object_bytes * frac))
+            for pol in policies:
+                engine = SimulationEngine(snapshot_every=snapshot_every)
+                r = run_policy(pol, tr, cap, engine=engine, with_snapshots=True)
+                r["frac"] = frac
+                r["snapshot_every"] = snapshot_every
+                # Fig. 11/12 headline: how far the worst interval sags below
+                # the mean (lower sag = more robust over time).
+                intervals = [s["interval_hit_ratio"] for s in r["snapshots"]]
+                if intervals:
+                    r["min_interval_hit_ratio"] = round(min(intervals), 5)
+                    r["max_interval_hit_ratio"] = round(max(intervals), 5)
+                rows.append(r)
+    emit("robustness", rows, derived_key="min_interval_hit_ratio")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -13,13 +13,14 @@ import time
 
 
 def main() -> None:
-    from . import filter_variants, overhead, pruning, state_of_art, trace_stats
+    from . import filter_variants, overhead, pruning, robustness, state_of_art, trace_stats
 
     benches = {
         "trace_stats": trace_stats.main,  # Table 1 / Fig 8
         "pruning": pruning.main,  # Fig 7
         "filter_variants": filter_variants.main,  # Figs 9-10
-        "state_of_art": state_of_art.main,  # Figs 11-12
+        "state_of_art": state_of_art.main,  # Figs 11-12 (end-to-end)
+        "robustness": robustness.main,  # Figs 11-12 (hit ratio over time)
         "overhead": overhead.main,  # Fig 13 / Table 2
     }
     try:  # serving integration bench (needs the serving stack)

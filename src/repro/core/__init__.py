@@ -4,6 +4,11 @@ Public surface:
 
 * :class:`SizeAwareWTinyLFU` — W-TinyLFU with IV / QV / AV size-aware
   admission (the paper, Section 4) over pluggable Main-cache eviction.
+  Structured as a control-plane/data-plane split: admission disciplines
+  live in :mod:`repro.core.admission` and score each decision's victim set
+  (gathered as arrays via ``EvictionPolicy.peek_victims``) with one batched
+  ``sketch.estimate_batch`` call — fused with the pending-increment flush
+  into a single Pallas kernel launch under ``sketch_backend="cms"``.
 * Baselines: LRU, SampledLFU, GDSF, AdaptSize, LHD, LRB-lite, BeladySize.
 * **Policy registry** — every policy self-registers via
   :func:`register_policy`; :data:`REGISTRY` builds any policy from a
@@ -39,11 +44,19 @@ Defining a new policy (see also ``examples/quickstart.py``)::
 
 from __future__ import annotations
 
+from .admission import (
+    AdmissionPolicy,
+    AVAdmission,
+    IVAdmission,
+    QVAdmission,
+    make_admission,
+)
 from .baselines import AdaptSizeCache, GDSFCache, LHDCache, LRUCache, SampledLFUCache
 from .belady import BeladySizeCache, belady_boundary
 from .cache_api import AccessTrace, CachePolicy, CacheStats, simulate
 from .engine import (
     CapacityInvariant,
+    HitMaskRecorder,
     Instrument,
     SimulationEngine,
     SimulationResult,
@@ -89,6 +102,13 @@ __all__ = [
     "StatsSnapshot",
     "Instrument",
     "CapacityInvariant",
+    "HitMaskRecorder",
+    # admission data plane (control-plane/data-plane split)
+    "AdmissionPolicy",
+    "IVAdmission",
+    "QVAdmission",
+    "AVAdmission",
+    "make_admission",
     # deprecated shims
     "simulate",
     "make_policy",

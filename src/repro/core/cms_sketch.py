@@ -48,6 +48,10 @@ class CMSSketch:
         without affecting results (increments commute).
     """
 
+    #: One kernel call scores a whole batch: the admission plane's "auto"
+    #: mode picks the batched data plane for this backend.
+    batched_native = True
+
     def __init__(
         self,
         expected_entries: int,
@@ -60,10 +64,15 @@ class CMSSketch:
         import jax  # deferred: keep repro.core importable without jax
         import jax.numpy as jnp
 
-        from repro.kernels.cms.cms import cms_estimate_pallas, cms_update_pallas
+        from repro.kernels.cms.cms import (
+            cms_estimate_pallas,
+            cms_update_estimate_pallas,
+            cms_update_pallas,
+        )
         from repro.kernels.cms.ref import (
             ROWS,
             cms_estimate_ref,
+            cms_update_estimate_ref,
             cms_update_ref,
             row_indexes,
         )
@@ -73,8 +82,10 @@ class CMSSketch:
         self.use_pallas = self._on_tpu if use_pallas is None else use_pallas
         self._update_pallas = cms_update_pallas
         self._estimate_pallas = cms_estimate_pallas
+        self._update_estimate_pallas = cms_update_estimate_pallas
         self._update_ref = cms_update_ref
         self._estimate_ref = cms_estimate_ref
+        self._update_estimate_ref = cms_update_estimate_ref
         self._row_indexes = row_indexes
 
         expected_entries = max(16, int(expected_entries))
@@ -131,7 +142,37 @@ class CMSSketch:
         return int(self.estimate_batch(np.asarray([key], dtype=np.int64))[0])
 
     def estimate_batch(self, keys) -> np.ndarray:
-        """Frequency estimates for ``keys`` in one batched kernel call."""
+        """Frequency estimates for ``keys`` — the data plane's single scoring
+        entry point. When increments are pending and fit one sub-batch with no
+        aging reset due, the flush and the scoring run as ONE fused kernel
+        call (update + estimate-on-updated-table); otherwise the staged
+        ``flush()`` runs first and a plain estimate follows."""
+        if not isinstance(keys, (list, tuple, np.ndarray)):
+            # e.g. the admission plane's lazy victim-prefix view: a device
+            # sketch scores the whole prefix eagerly in its one kernel call
+            keys = list(keys)
+        pending = self._pending
+        n = len(pending)
+        if 0 < n <= self.flush_block and self._ops + n < self.sample_size:
+            upd = np.asarray(pending, dtype=np.int64).astype(np.int32)
+            est = np.asarray(keys, dtype=np.int64).astype(np.int32)
+            jupd = self._jnp.asarray(upd)
+            jest = self._jnp.asarray(est)
+            if self.use_pallas:
+                upd_idx = self._row_indexes(jupd, self.width)
+                est_idx = self._row_indexes(jest, self.width)
+                self.table, vals = self._update_estimate_pallas(
+                    self.table, upd_idx, est_idx, cap=self.cap,
+                    interpret=not self._on_tpu,
+                )
+                vals = vals.min(0)
+            else:
+                self.table, vals = self._update_estimate_ref(
+                    self.table, jupd, jest, cap=self.cap
+                )
+            self._ops += n
+            self._pending = []
+            return np.asarray(vals)
         self.flush()
         keys = np.asarray(keys, dtype=np.int64).astype(np.int32)
         jkeys = self._jnp.asarray(keys)

@@ -10,11 +10,15 @@ Replaces the old free-function ``simulate`` loop with a
   from the reported stats);
 * records periodic :class:`StatsSnapshot` rows (hit-ratio-over-time curves
   for the robustness plots);
-* dispatches to a policy's optional ``access_batch(keys, sizes)`` fast path
-  when one exists (e.g. :class:`~repro.core.tinylfu.SizeAwareWTinyLFU`
-  batching its sketch traffic through the Pallas CMS kernels);
+* drives a policy's ``access_batch(keys, sizes)`` fast path **by default**
+  whenever one exists (e.g. :class:`~repro.core.tinylfu.SizeAwareWTinyLFU`,
+  whose batched admission data plane scores each decision with one fused
+  Pallas CMS kernel call) — the scalar loop remains for per-access
+  instrumentation and as the reference semantics;
 * runs pluggable :class:`Instrument` hooks — the old ``check_invariants``
-  flag is now the :class:`CapacityInvariant` instrument.
+  flag is now the :class:`CapacityInvariant` instrument, and
+  :class:`HitMaskRecorder` captures the per-access hit/miss decision stream
+  on either drive path (the equivalence tests' trace-wide assertion).
 
 The legacy ``simulate(policy, trace)`` entry point survives as a thin shim
 in :mod:`repro.core.cache_api`.
@@ -34,6 +38,7 @@ from .cache_api import AccessTrace, CachePolicy, CacheStats
 __all__ = [
     "Instrument",
     "CapacityInvariant",
+    "HitMaskRecorder",
     "StatsSnapshot",
     "SimulationResult",
     "SimulationEngine",
@@ -79,6 +84,32 @@ class CapacityInvariant(Instrument):
                 f"capacity invariant violated: used={used} > cap={policy.capacity} "
                 f"after access ({key}, {size})"
             )
+
+
+class HitMaskRecorder(Instrument):
+    """Record the full hit/miss decision stream of a run.
+
+    Hooks :meth:`on_chunk` (not :meth:`on_access`), so it observes both the
+    scalar and the batched drive paths without forcing either — which is
+    what makes it usable as the trace-wide "byte-identical decisions"
+    assertion between the two admission data planes.
+    """
+
+    def __init__(self):
+        self._chunks: list[np.ndarray] = []
+
+    def on_run_start(self, policy: CachePolicy) -> None:
+        self._chunks = []
+
+    def on_chunk(self, policy: CachePolicy, keys, sizes, hits) -> None:
+        self._chunks.append(np.asarray(hits, dtype=bool).copy())
+
+    @property
+    def hits(self) -> np.ndarray:
+        """Bool array parallel to the driven trace (warmup included)."""
+        if not self._chunks:
+            return np.zeros(0, dtype=bool)
+        return np.concatenate(self._chunks)
 
 
 @dataclasses.dataclass(frozen=True)

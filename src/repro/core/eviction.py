@@ -7,9 +7,22 @@ lowest frequency-per-byte / closest-to-needed-size), and Random.
 
 The admission schemes (IV/QV/AV) need to *peek* at successive would-be victims
 without evicting them (AV gathers a victim set first; QV walks one at a time),
-so the interface exposes :meth:`iter_victims` — a generator of distinct
-candidate victims in eviction order — alongside the mutating
-:meth:`evict`/:meth:`insert`/:meth:`on_access`/:meth:`promote` operations.
+so the interface exposes two victim views:
+
+* :meth:`iter_victims` — the scalar control plane: a generator of distinct
+  candidate victims in eviction order;
+* :meth:`peek_victims` — the array data plane: the minimal victim prefix
+  covering ``needed`` bytes as parallel ``(keys, sizes)`` arrays, ready for
+  one batched sketch scoring call. Equivalent to gathering
+  :meth:`iter_victims` until the sizes cover ``needed`` (asserted by
+  property tests); LRU/SLRU override it to walk their order dicts directly,
+  touching O(prefix) entries where ``iter_victims`` snapshots O(n).
+
+Policies whose victim order is a deterministic snapshot (peeking consumes no
+RNG state and interleaved evictions cannot reorder unseen victims) advertise
+``peek_stable = True``; the batched admission plane falls back to the scalar
+walk on the others (sampling policies draw from a live key list, so
+pre-gathering would perturb the RNG stream).
 """
 
 from __future__ import annotations
@@ -17,6 +30,8 @@ from __future__ import annotations
 import random
 from collections import OrderedDict
 from typing import Callable, Iterator
+
+import numpy as np
 
 __all__ = [
     "EvictionPolicy",
@@ -30,6 +45,11 @@ __all__ = [
 
 class EvictionPolicy:
     """Bookkeeping for cached entries; selects victims. Sizes in bytes."""
+
+    #: True when the victim order is a deterministic snapshot: peeking draws
+    #: no RNG state and evicting already-yielded victims cannot change which
+    #: victims follow. Enables the single-batch admission data plane.
+    peek_stable: bool = False
 
     def __init__(self):
         self.sizes: dict[int, int] = {}
@@ -71,9 +91,53 @@ class EvictionPolicy:
     def victim(self, needed: int = 0) -> int | None:
         return next(self.iter_victims(needed), None)
 
+    def peek_victims(self, needed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+        """Array view of the minimal victim prefix covering ``needed`` bytes.
+
+        Returns parallel int64 ``(keys, sizes)`` arrays: the victims
+        :meth:`iter_victims` would yield, truncated at the first point where
+        their cumulative size reaches ``needed`` (every victim if the whole
+        cache cannot cover it; empty for ``needed <= 0``). Never evicts or
+        reorders — but on the sampling policies the walk necessarily draws
+        from the policy's RNG (their victim stream IS random draws), so
+        peeking advances the stream exactly as one :meth:`iter_victims`
+        gather would; peek-stable policies are side-effect free. This is
+        the device-handoff view (keys must be int64-representable); the
+        in-process admission plane streams the same walk lazily through
+        ``_peek_iter`` instead (see :class:`repro.core.admission` — that
+        path also carries arbitrary-precision keys such as the serving
+        prefix cache's hashes).
+        """
+        keys: list[int] = []
+        vsizes: list[int] = []
+        if needed > 0:
+            total = 0
+            sizes = self.sizes
+            for v in self._peek_iter(needed):
+                keys.append(v)
+                s = sizes[v]
+                vsizes.append(s)
+                total += s
+                if total >= needed:
+                    break
+        return (np.asarray(keys, dtype=np.int64), np.asarray(vsizes, dtype=np.int64))
+
+    def _peek_iter(self, needed: int) -> Iterator[int]:
+        """Streaming victim-order walk for the lazy data-plane gather.
+
+        Same victims in the same order as :meth:`iter_victims`; peek-stable
+        policies override it with a *live* (copy-free) traversal so pulling
+        k victims costs O(k) instead of an O(n) snapshot. Callers must stop
+        advancing it before mutating the policy (the admission replays pull
+        everything they need before evicting/promoting).
+        """
+        return self.iter_victims(needed)
+
 
 class LRUEviction(EvictionPolicy):
     """Plain LRU: victims from the least-recently-used end."""
+
+    peek_stable = True
 
     def __init__(self):
         super().__init__()
@@ -94,6 +158,11 @@ class LRUEviction(EvictionPolicy):
     def iter_victims(self, needed: int = 0) -> Iterator[int]:
         return iter(list(self.order))
 
+    def _peek_iter(self, needed: int) -> Iterator[int]:
+        # Walk the order dict live: O(pulled), where iter_victims copies the
+        # whole order (O(n)) before yielding the first victim.
+        return iter(self.order)
+
 
 class SLRUEviction(EvictionPolicy):
     """Segmented LRU: probationary + protected segments (Caffeine's Main).
@@ -103,6 +172,8 @@ class SLRUEviction(EvictionPolicy):
     policy currently holds' capacity), its LRU entries demote back to
     probation MRU. Victims drain from probation LRU first, then protected LRU.
     """
+
+    peek_stable = True
 
     def __init__(self, capacity: int, protected_frac: float = 0.8):
         super().__init__()
@@ -152,6 +223,10 @@ class SLRUEviction(EvictionPolicy):
     def iter_victims(self, needed: int = 0) -> Iterator[int]:
         yield from list(self.probation)
         yield from list(self.protected)
+
+    def _peek_iter(self, needed: int) -> Iterator[int]:
+        yield from self.probation
+        yield from self.protected
 
 
 class SampledEviction(EvictionPolicy):

@@ -17,6 +17,43 @@ from __future__ import annotations
 
 __all__ = ["FrequencySketch", "mix64"]
 
+
+class _LazyEstimates:
+    """Sequence view over a key batch's estimates, evaluated on demand.
+
+    The admission data plane issues ONE ``estimate_batch`` call per decision
+    and its replay loops consume a *prefix* of the result (AV's early
+    pruning and QV's first-loss stop cut the walk short). A device sketch
+    evaluates the whole batch eagerly anyway — one kernel call is the whole
+    point — but the host sketch has no vector unit to exploit, so its batch
+    is gathered lazily: only the entries the replay actually reads are
+    computed, making the batched plane cost exactly what the scalar walk
+    costs. Estimates are read-only, so deferring them past the call site
+    cannot change their values (no increments land mid-decision).
+    """
+
+    __slots__ = ("_keys", "_vals", "_estimate")
+
+    def __init__(self, keys, estimate):
+        self._keys = keys
+        self._vals: list[int] = []
+        self._estimate = estimate
+
+    def __len__(self) -> int:
+        return len(self._keys)
+
+    def __getitem__(self, i: int) -> int:
+        vals = self._vals
+        if i < 0:
+            i += len(self._keys)
+        while len(vals) <= i:
+            vals.append(self._estimate(int(self._keys[len(vals)])))
+        return vals[i]
+
+    def __iter__(self):
+        for i in range(len(self._keys)):
+            yield self[i]
+
 _MASK64 = (1 << 64) - 1
 _MIX1 = 0xBF58476D1CE4E5B9
 _MIX2 = 0x94D049BB133111EB
@@ -59,6 +96,10 @@ class FrequencySketch:
     """
 
     ROWS = 4
+    #: No vector unit behind estimate_batch: batching buys nothing here, so
+    #: the admission plane's "auto" mode keeps the scalar walk (the paper's
+    #: lightweight hot path). The CMS backend flips this to True.
+    batched_native = False
 
     def __init__(
         self,
@@ -157,6 +198,14 @@ class FrequencySketch:
             if self._door[h & self._dk_mask] and self._door[(h >> 21) & self._dk_mask]:
                 est += 1
         return est
+
+    def estimate_batch(self, keys) -> _LazyEstimates:
+        """Estimates for a whole key batch — the single scoring entry point
+        of the admission data plane. The host sketch has no device batching
+        to exploit, so the result is a :class:`_LazyEstimates` prefix view
+        (only consumed entries are computed); the CMS backend's
+        ``estimate_batch`` is eager — one fused kernel call."""
+        return _LazyEstimates(keys, self.estimate)
 
     def _reset(self) -> None:
         """Aging: halve every counter and clear the doorkeeper (paper §3)."""

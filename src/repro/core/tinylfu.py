@@ -10,18 +10,22 @@ objects (Alg. 1):
 * inserting into the Window can push out *multiple* Window victims, each of
   which becomes a Main-cache candidate.
 
-The three admission disciplines for a candidate vs. Main victims:
+This class is a thin **composition** of the three planes:
 
-* **IV** (Implicit Victims, Alg. 2 — Caffeine): compare against the *first*
-  victim only; on win, blindly evict as many victims as needed.
-* **QV** (Queue of Victims, Alg. 3 — Ristretto): walk victims, evicting every
-  victim the candidate beats (these evictions stick even if the candidate is
-  ultimately rejected); admit iff enough space was freed.
-* **AV** (Aggregated Victims, Alg. 4 — this paper): gather victims until their
-  total size suffices; admit iff ``freq(candidate) ≥ Σ freq(victims)``; with
-  *early pruning*, stop gathering as soon as the victim frequency sum already
-  exceeds the candidate's frequency (Fig. 7 shows ×4–×16 fewer victim
-  examinations).
+* the Window LRU + Alg. 1 miss cascade (here);
+* a pluggable Main :class:`~repro.core.eviction.EvictionPolicy` exposing both
+  the scalar ``iter_victims`` walk and the array ``peek_victims`` view;
+* an :class:`~repro.core.admission.AdmissionPolicy` (IV / QV / AV) whose
+  batched data plane scores candidate + victim set with **one**
+  ``sketch.estimate_batch`` call per admission decision (with
+  ``sketch_backend="cms"``, the pending-increment flush and that scoring
+  fuse into a single Pallas kernel launch).
+
+``access_batch`` is the primary drive path (the default under
+:class:`~repro.core.engine.SimulationEngine`); ``access`` remains for scalar
+driving and per-access instrumentation. ``data_plane="scalar"`` pins the
+admission policies to their reference per-victim walks — byte-identical
+decisions to the batched plane, asserted trace-wide in tests.
 """
 
 from __future__ import annotations
@@ -30,14 +34,14 @@ from collections import OrderedDict
 
 import numpy as np
 
+from .admission import ADMISSIONS, AdmissionPolicy, make_admission
 from .cache_api import CacheStats
 from .eviction import EvictionPolicy, make_eviction
 from .registry import register_policy
 from .sketch import FrequencySketch
 
-__all__ = ["SizeAwareWTinyLFU", "ADMISSIONS", "EVICTIONS"]
+__all__ = ["SizeAwareWTinyLFU", "ADMISSIONS", "EVICTIONS", "DATA_PLANES"]
 
-ADMISSIONS = ("iv", "qv", "av")
 EVICTIONS = (
     "slru",
     "lru",
@@ -49,6 +53,7 @@ EVICTIONS = (
 )
 
 SKETCH_BACKENDS = ("host", "cms")
+DATA_PLANES = ("auto", "batched", "scalar")
 
 
 def _wtlfu_alias(name: str) -> dict | None:
@@ -93,6 +98,15 @@ class SizeAwareWTinyLFU:
         Pallas count-min-sketch kernels; increments are buffered and
         flushed lazily before estimates, which is exactly equivalent to
         scalar driving — see :mod:`repro.core.cms_sketch`).
+    data_plane: ``"batched"`` scores each admission decision with one
+        ``estimate_batch`` call over the lazily-gathered victim prefix;
+        ``"scalar"`` pins the reference per-victim walk. The default
+        ``"auto"`` picks per sketch backend (``sketch.batched_native``):
+        batched for the CMS kernels — one fused launch per decision beats
+        per-victim kernel calls — and the scalar walk for the host sketch,
+        where CPython method dispatch makes direct calls the lightweight
+        option at typical victim counts. Decisions are byte-identical
+        either way (asserted trace-wide in tests).
     """
 
     def __init__(
@@ -108,11 +122,14 @@ class SizeAwareWTinyLFU:
         seed: int = 0x5EED,
         sketch_backend: str = "host",
         sketch_kwargs: dict | None = None,
+        data_plane: str = "auto",
     ):
         if admission not in ADMISSIONS:
             raise ValueError(f"admission must be one of {ADMISSIONS}")
         if sketch_backend not in SKETCH_BACKENDS:
             raise ValueError(f"sketch_backend must be one of {SKETCH_BACKENDS}")
+        if data_plane not in DATA_PLANES:
+            raise ValueError(f"data_plane must be one of {DATA_PLANES}")
         self.capacity = int(capacity)
         self.window_cap = max(1, int(capacity * window_frac))
         self.main_cap = self.capacity - self.window_cap
@@ -143,6 +160,17 @@ class SizeAwareWTinyLFU:
         # Main: pluggable eviction policy (owns its size map).
         self.main: EvictionPolicy = make_eviction(
             eviction, capacity=self.main_cap, freq_fn=self.sketch.estimate, seed=seed
+        )
+        # Admission: IV/QV/AV arbitration over (sketch, main).
+        kw = {"early_pruning": early_pruning} if admission == "av" else {}
+        self.admission_policy: AdmissionPolicy = make_admission(admission, self.sketch, **kw)
+        if data_plane == "auto":
+            data_plane = "batched" if getattr(self.sketch, "batched_native", False) else "scalar"
+        self.data_plane = data_plane  # resolved, never "auto"
+        self._admit = (
+            self.admission_policy.admit
+            if data_plane == "batched"
+            else self.admission_policy.admit_scalar
         )
         self.stats = CacheStats()
 
@@ -175,13 +203,14 @@ class SizeAwareWTinyLFU:
         return False
 
     def access_batch(self, keys, sizes) -> np.ndarray:
-        """Chunked fast path: drive a parallel key/size array pair.
+        """Primary drive path: a parallel key/size array pair per chunk.
 
         Observationally identical to calling :meth:`access` per element
         (asserted by tests): the loop body is the same state machine with
         hot attributes hoisted out, and with the ``cms`` sketch backend the
         per-access increments are buffered and flushed through one batched
-        Pallas kernel call right before the next admission decision.
+        Pallas kernel call fused with the next admission decision's victim
+        scoring.
         """
         n = len(keys)
         hits = np.empty(n, dtype=bool)
@@ -274,125 +303,4 @@ class SizeAwareWTinyLFU:
             self.main.insert(key, size)
             self.stats.admissions += 1
             return
-        needed = size - free
-        if self.admission == "iv":
-            self._admit_iv(key, size, needed)
-        elif self.admission == "qv":
-            self._admit_qv(key, size, needed)
-        else:
-            self._admit_av(key, size, needed)
-
-    # -- Algorithm 2: Implicit Victims (Caffeine) ---------------------------
-    def _admit_iv(self, key: int, size: int, needed: int) -> None:
-        st = self.stats
-        estimate = self.sketch.estimate
-        first = self.main.victim(needed)
-        st.victims_examined += 1
-        if estimate(key) >= estimate(first):
-            freed = 0
-            it = self.main.iter_victims(needed)
-            while freed < needed:
-                v = next(it)
-                freed += self.main.sizes[v]
-                self.main.evict(v)
-                st.evictions += 1
-            self.main.insert(key, size)
-            st.admissions += 1
-        else:
-            self.main.promote(first)
-            st.rejections += 1
-
-    # -- Algorithm 3: Queue of Victims (Ristretto) ---------------------------
-    def _admit_qv(self, key: int, size: int, needed: int) -> None:
-        st = self.stats
-        estimate = self.sketch.estimate
-        cand_f = estimate(key)
-        freed = 0
-        it = self.main.iter_victims(needed)
-        while freed < needed:
-            v = next(it, None)
-            if v is None:
-                break
-            st.victims_examined += 1
-            if cand_f >= estimate(v):
-                freed += self.main.sizes[v]
-                self.main.evict(v)  # sticks even if candidate is rejected
-                st.evictions += 1
-            else:
-                self.main.promote(v)
-                break
-        if freed >= needed:
-            self.main.insert(key, size)
-            st.admissions += 1
-        else:
-            st.rejections += 1
-
-    # -- Algorithm 4: Aggregated Victims (this paper) ------------------------
-    def _admit_av(self, key: int, size: int, needed: int) -> None:
-        st = self.stats
-        estimate_batch = getattr(self.sketch, "estimate_batch", None)
-        if estimate_batch is not None and not self.early_pruning:
-            # Without early pruning the victim set depends only on sizes, so
-            # it can be gathered first and the candidate + all victims scored
-            # in ONE batched kernel call (same decisions, fewer sketch trips).
-            self._admit_av_batched(key, size, needed, estimate_batch)
-            return
-        estimate = self.sketch.estimate
-        cand_f = estimate(key)
-        victims: list[int] = []
-        vbytes = 0
-        vfreq = 0
-        it = self.main.iter_victims(needed)
-        pruned = False
-        while vbytes < needed:
-            v = next(it, None)
-            if v is None:  # cannot free enough (shouldn't happen: size<=main_cap)
-                pruned = True
-                break
-            victims.append(v)
-            vbytes += self.main.sizes[v]
-            vfreq += estimate(v)
-            st.victims_examined += 1
-            if self.early_pruning and cand_f < vfreq:  # lines 6-7
-                pruned = True
-                break
-        if not pruned and cand_f >= vfreq:
-            for v in victims:  # lines 9-11
-                self.main.evict(v)
-                st.evictions += 1
-            self.main.insert(key, size)
-            st.admissions += 1
-        else:
-            for v in victims:  # lines 13-14
-                self.main.promote(v)
-            st.rejections += 1
-
-    def _admit_av_batched(self, key: int, size: int, needed: int, estimate_batch) -> None:
-        """AV without early pruning, scoring candidate + victim set in one
-        batched sketch estimate. Decision-identical to the scalar walk."""
-        st = self.stats
-        victims: list[int] = []
-        vbytes = 0
-        it = self.main.iter_victims(needed)
-        exhausted = False
-        while vbytes < needed:
-            v = next(it, None)
-            if v is None:  # cannot free enough (shouldn't happen: size<=main_cap)
-                exhausted = True
-                break
-            victims.append(v)
-            vbytes += self.main.sizes[v]
-            st.victims_examined += 1
-        freqs = estimate_batch(np.asarray([key] + victims, dtype=np.int64))
-        cand_f = int(freqs[0])
-        vfreq = int(freqs[1:].sum())
-        if not exhausted and cand_f >= vfreq:
-            for v in victims:
-                self.main.evict(v)
-                st.evictions += 1
-            self.main.insert(key, size)
-            st.admissions += 1
-        else:
-            for v in victims:
-                self.main.promote(v)
-            st.rejections += 1
+        self._admit(key, size, size - free, self.main, self.stats)

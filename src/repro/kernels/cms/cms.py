@@ -10,6 +10,10 @@ lane-aligned VPU work — per width-block one-hot comparisons:
   grid over width-blocks partitions the work.
 * estimate: per block, accumulate (idx == w) * table[w] into [ROWS, N]
   partials; min over rows taken by the jnp wrapper.
+* update+estimate (fused): both of the above in one grid pass — the batch of
+  pending increments is applied to each block and the estimate keys gather
+  from the *updated* block, so an admission decision's sketch flush and
+  victim scoring land in a single kernel launch.
 
 The table block (BW lanes) and the key-index vectors live in VMEM; grids
 iterate width-blocks. Both kernels are validated against ref.py in
@@ -62,6 +66,38 @@ def _estimate_kernel(idx_ref, table_ref, out_ref, *, block_w: int):
     out_ref[...] += vals
 
 
+def _update_estimate_kernel(upd_ref, est_ref, table_ref, out_table_ref, out_vals_ref,
+                            *, cap: int, block_w: int):
+    """Fused flush + score: add the update-batch counts to this width block,
+    then gather the estimate keys from the *updated* block. One grid pass
+    replaces an update call followed by an estimate call — the admission
+    data plane issues exactly one kernel launch per decision."""
+    wi = pl.program_id(0)
+    wstart = wi * block_w
+    table = table_ref[...]  # [ROWS, BW]
+
+    upd = upd_ref[...]  # [ROWS, M]
+    u_local = upd - wstart
+    u_iota = jax.lax.broadcasted_iota(jnp.int32, (ROWS, upd.shape[1], block_w), 2)
+    u_hit = (u_local[:, :, None] == u_iota).astype(table.dtype)  # [ROWS, M, BW]
+    new_table = jnp.minimum(table + u_hit.sum(axis=1), cap)
+    out_table_ref[...] = new_table
+
+    est = est_ref[...]  # [ROWS, N]
+    e_local = est - wstart
+    in_block = (e_local >= 0) & (e_local < block_w)
+    e_iota = jax.lax.broadcasted_iota(jnp.int32, (ROWS, est.shape[1], block_w), 2)
+    e_hit = (e_local[:, :, None] == e_iota).astype(table.dtype)
+    vals = (e_hit * new_table[:, None, :]).sum(axis=2)  # [ROWS, N]
+    vals = jnp.where(in_block, vals, 0)
+
+    @pl.when(wi == 0)
+    def _init():
+        out_vals_ref[...] = jnp.zeros_like(out_vals_ref)
+
+    out_vals_ref[...] += vals
+
+
 def cms_update_pallas(table, idx, *, cap: int = 15, block_w: int = DEFAULT_BLOCK_W,
                       interpret: bool = True):
     """table [ROWS, W] int32; idx [ROWS, N] int32 (precomputed row indexes)."""
@@ -100,3 +136,34 @@ def cms_estimate_pallas(table, idx, *, block_w: int = DEFAULT_BLOCK_W,
         out_shape=jax.ShapeDtypeStruct(idx.shape, table.dtype),
         interpret=interpret,
     )(idx, table)
+
+
+def cms_update_estimate_pallas(table, upd_idx, est_idx, *, cap: int = 15,
+                               block_w: int = DEFAULT_BLOCK_W, interpret: bool = True):
+    """Fused update + estimate: apply ``upd_idx`` [ROWS, M] increments, then
+    gather ``est_idx`` [ROWS, N] counters from the updated table, in one
+    kernel launch. Returns ``(new_table [ROWS, W], vals [ROWS, N])`` (min over
+    rows taken by the caller) — identical results to ``cms_update_pallas``
+    followed by ``cms_estimate_pallas``."""
+    rows, width = table.shape
+    block_w = min(block_w, width)
+    assert rows == ROWS and width % block_w == 0
+    grid = (width // block_w,)
+    return pl.pallas_call(
+        functools.partial(_update_estimate_kernel, cap=cap, block_w=block_w),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(upd_idx.shape, lambda w: (0, 0)),
+            pl.BlockSpec(est_idx.shape, lambda w: (0, 0)),
+            pl.BlockSpec((ROWS, block_w), lambda w: (0, w)),
+        ],
+        out_specs=(
+            pl.BlockSpec((ROWS, block_w), lambda w: (0, w)),
+            pl.BlockSpec(est_idx.shape, lambda w: (0, 0)),  # accumulated
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct(table.shape, table.dtype),
+            jax.ShapeDtypeStruct(est_idx.shape, table.dtype),
+        ),
+        interpret=interpret,
+    )(upd_idx, est_idx, table)

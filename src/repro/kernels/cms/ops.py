@@ -9,10 +9,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .cms import cms_estimate_pallas, cms_update_pallas
-from .ref import ROWS, cms_estimate_ref, cms_update_ref, row_indexes
+from .cms import cms_estimate_pallas, cms_update_estimate_pallas, cms_update_pallas
+from .ref import ROWS, cms_estimate_ref, cms_update_estimate_ref, cms_update_ref, row_indexes
 
-__all__ = ["make_table", "update", "estimate", "reset", "DeviceSketch"]
+__all__ = ["make_table", "update", "estimate", "update_estimate", "reset", "DeviceSketch"]
 
 
 def make_table(width: int) -> jax.Array:
@@ -37,6 +37,22 @@ def estimate(table, keys, *, use_pallas: bool = True):
                                    interpret=jax.default_backend() != "tpu")
         return vals.min(0)
     return cms_estimate_ref(table, keys)
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "use_pallas"))
+def update_estimate(table, upd_keys, est_keys, *, cap: int = 15, use_pallas: bool = True):
+    """Fused flush + score: apply ``upd_keys`` then estimate ``est_keys`` on
+    the updated table in one kernel launch. Returns ``(new_table, vals[N])``
+    — the admission data plane's one-call-per-decision primitive."""
+    if use_pallas:
+        width = table.shape[1]
+        upd_idx = row_indexes(upd_keys, width)
+        est_idx = row_indexes(est_keys, width)
+        new_table, vals = cms_update_estimate_pallas(
+            table, upd_idx, est_idx, cap=cap,
+            interpret=jax.default_backend() != "tpu")
+        return new_table, vals.min(0)
+    return cms_update_estimate_ref(table, upd_keys, est_keys, cap=cap)
 
 
 @jax.jit

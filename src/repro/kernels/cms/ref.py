@@ -56,3 +56,12 @@ def cms_estimate_ref(table, keys):
     idx = row_indexes(keys, width)  # [ROWS, N]
     vals = jnp.take_along_axis(table, idx, axis=1)  # [ROWS, N]
     return vals.min(0)
+
+
+def cms_update_estimate_ref(table, upd_keys, est_keys, cap: int = 15):
+    """Fused oracle: apply ``upd_keys`` then estimate ``est_keys`` on the
+    updated table. Returns ``(new_table, estimates[N])`` — semantically
+    identical to ``cms_update_ref`` followed by ``cms_estimate_ref`` (the
+    admission data plane's flush + victim scoring in one step)."""
+    new_table = cms_update_ref(table, upd_keys, cap=cap)
+    return new_table, cms_estimate_ref(new_table, est_keys)

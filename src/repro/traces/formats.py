@@ -1,5 +1,17 @@
-"""On-disk trace formats: compressed npz (native) and key,size text files
-(interchange with webcachesim-style simulators)."""
+"""On-disk trace formats: compressed npz (native) and text files
+(interchange with webcachesim-style simulators).
+
+Text traces in the wild are messy: webcachesim-style files carry
+``<timestamp> <key> <size>`` or ``<key> <size>`` rows, timestamps are often
+*floats* (epoch seconds with fractions), headers/annotations hide behind
+``#`` comments, delimiters vary between whitespace and commas, and blank
+lines appear at the end. :func:`load_trace` parses all of that tolerantly
+instead of crashing on the first non-integer token; integer key/size
+tokens convert exactly (64-bit hashed object IDs must not round-trip
+through float64), float tokens are rounded (timestamps and unit-converted
+exports). Round-tripping through both formats is covered in
+``tests/test_traces_and_eviction.py``.
+"""
 
 from __future__ import annotations
 
@@ -11,22 +23,92 @@ from repro.core.cache_api import AccessTrace
 
 __all__ = ["save_trace", "load_trace"]
 
+TEXT_SUFFIXES = (".txt", ".csv", ".tr")
+
 
 def save_trace(trace: AccessTrace, path: str | pathlib.Path) -> None:
+    """Write ``trace`` to ``path``: compressed npz natively, or webcachesim
+    ``<key> <size>`` text when the suffix is one of ``.txt``/``.csv``/``.tr``
+    (comma-delimited for ``.csv``)."""
     path = pathlib.Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
+    if path.suffix in TEXT_SUFFIXES:
+        delim = "," if path.suffix == ".csv" else " "
+        rows = np.stack([trace.keys, trace.sizes], axis=1)
+        np.savetxt(path, rows, fmt="%d", delimiter=delim,
+                   header=f"trace {trace.name}: key{delim}size")
+        return
     np.savez_compressed(path, name=np.array(trace.name), keys=trace.keys, sizes=trace.sizes)
+
+
+def _parse_text_rows(path: pathlib.Path) -> list[list[str]]:
+    """Tolerant text parse -> rows of string tokens.
+
+    Accepts ``#`` comment/header lines (whole-line and inline), float
+    timestamps, blank lines, and either whitespace or comma delimiters.
+    Tokens stay strings here so integer columns can be converted exactly
+    (64-bit hashed object IDs are common; routing them through float64
+    would silently merge nearby keys).
+    """
+    rows: list[list[str]] = []
+    ncols = None
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            body = line.split("#", 1)[0].strip()
+            if not body:
+                continue
+            tokens = body.replace(",", " ").split()
+            if ncols is None:
+                ncols = len(tokens)
+            elif len(tokens) != ncols:
+                raise ValueError(
+                    f"unparseable trace file {path}: line {lineno} has "
+                    f"{len(tokens)} column(s), expected {ncols}"
+                )
+            rows.append(tokens)
+    return rows
+
+
+def _int_column(rows: list[list[str]], col: int, path: pathlib.Path) -> np.ndarray:
+    """Exact int64 conversion of one column; floats are rounded (timestamps
+    and unit-converted exports), pure integers never lose precision."""
+    out = np.empty(len(rows), dtype=np.int64)
+    for i, tokens in enumerate(rows):
+        tok = tokens[col]
+        try:
+            out[i] = int(tok)
+        except ValueError:
+            try:
+                out[i] = round(float(tok))
+            except ValueError as e:
+                raise ValueError(
+                    f"unparseable trace file {path}: bad value {tok!r} "
+                    f"in column {col}"
+                ) from e
+    return out
 
 
 def load_trace(path: str | pathlib.Path) -> AccessTrace:
     path = pathlib.Path(path)
-    if path.suffix in (".txt", ".csv", ".tr"):
+    if path.suffix in TEXT_SUFFIXES:
         # webcachesim format: "<timestamp> <key> <size>" or "<key> <size>"
-        rows = np.loadtxt(path, dtype=np.int64, ndmin=2)
-        if rows.shape[1] >= 3:
-            keys, sizes = rows[:, 1], rows[:, 2]
+        rows = _parse_text_rows(path)
+        if not rows:
+            raise ValueError(f"empty trace file {path}")
+        ncols = len(rows[0])
+        if ncols >= 3:
+            kcol, scol = 1, 2
+        elif ncols == 2:
+            kcol, scol = 0, 1
         else:
-            keys, sizes = rows[:, 0], rows[:, 1]
+            raise ValueError(
+                f"trace file {path} has {ncols} column(s); "
+                "expected 'key size' or 'timestamp key size'"
+            )
+        keys = _int_column(rows, kcol, path)
+        sizes = _int_column(rows, scol, path)
+        if (sizes <= 0).any():
+            raise ValueError(f"trace file {path} contains non-positive sizes")
         return AccessTrace(path.stem, keys, sizes)
     data = np.load(path, allow_pickle=False)
     return AccessTrace(str(data["name"]), data["keys"], data["sizes"])

@@ -21,6 +21,7 @@ sampled once per object and are stable across the trace.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import numpy as np
 
@@ -110,7 +111,9 @@ def make_trace(spec: TraceSpec | str, *, seed: int = 0, scale: float = 1.0) -> A
     """Generate a trace; ``scale`` shrinks both accesses and object count."""
     if isinstance(spec, str):
         spec = TRACE_SPECS[spec]
-    rng = np.random.default_rng([seed, hash(spec.name) & 0x7FFFFFFF])
+    # crc32, NOT hash(): str hashing is randomized per process, which would
+    # make "the same trace" differ between runs (and made tests flaky).
+    rng = np.random.default_rng([seed, zlib.crc32(spec.name.encode()) & 0x7FFFFFFF])
     n_acc = max(1000, int(spec.n_accesses * scale))
     n_obj = max(100, int(spec.n_objects * scale))
 

@@ -1,0 +1,296 @@
+"""The admission control-plane/data-plane split (ISSUE 2 acceptance).
+
+Covers, layer by layer:
+
+* ``EvictionPolicy.peek_victims`` ≡ gathering ``iter_victims`` until the
+  victim sizes cover ``needed`` — for every eviction policy, including the
+  RNG-sampling ones (compared under identical RNG state), both as seeded
+  sweeps and hypothesis properties;
+* batched vs scalar admission planes produce **byte-identical** hit/miss
+  decision streams, ``CacheStats`` and final cache contents, trace-wide,
+  across every ``TRACE_SPECS`` class and every admission x eviction combo;
+* the batched plane issues exactly ONE ``estimate_batch`` call per
+  admission decision and zero scalar ``estimate`` calls on the hot path;
+* ``CMSSketch.estimate_batch``'s fused flush+score kernel path equals the
+  staged flush-then-estimate path.
+"""
+
+import random
+
+import numpy as np
+import pytest
+from _hypothesis_compat import HealthCheck, given, settings, st
+
+from repro.core import (
+    REGISTRY,
+    HitMaskRecorder,
+    SimulationEngine,
+    SizeAwareWTinyLFU,
+    make_admission,
+)
+from repro.core.eviction import make_eviction
+from repro.traces import TRACE_SPECS, make_trace
+
+EVICTIONS = (
+    "lru",
+    "slru",
+    "sampled_frequency",
+    "sampled_size",
+    "sampled_frequency_size",
+    "sampled_needed_size",
+    "random",
+)
+
+
+def _gather_iter(e, needed):
+    """Reference: drain iter_victims until the sizes cover ``needed``."""
+    keys, sizes, total = [], [], 0
+    if needed > 0:
+        for v in e.iter_victims(needed):
+            keys.append(v)
+            s = e.sizes[v]
+            sizes.append(s)
+            total += s
+            if total >= needed:
+                break
+    return keys, sizes
+
+
+def _check_peek_equivalence(e, needed):
+    """peek_victims must equal the iter_victims gather under the same RNG
+    state, and must not mutate the policy."""
+    rng = getattr(e, "rng", None)
+    state = rng.getstate() if rng is not None else None
+    ref_keys, ref_sizes = _gather_iter(e, needed)
+    if state is not None:
+        rng.setstate(state)
+    before = (len(e), e.used)
+    keys, sizes = e.peek_victims(needed)
+    assert isinstance(keys, np.ndarray) and isinstance(sizes, np.ndarray)
+    assert keys.dtype == np.int64 and sizes.dtype == np.int64
+    assert keys.tolist() == ref_keys
+    assert sizes.tolist() == ref_sizes
+    assert (len(e), e.used) == before, "peek_victims mutated the policy"
+    if state is not None:
+        rng.setstate(state)
+
+
+def _filled_eviction(name, entries, *, hot_accesses=()):
+    e = make_eviction(name, capacity=10**9, freq_fn=lambda k: (k * 7) % 13, seed=0xA11CE)
+    for k, s in entries:
+        e.insert(k, s)
+    for k in hot_accesses:
+        e.on_access(k)
+    return e
+
+
+def test_auto_data_plane_resolves_per_backend():
+    """auto -> scalar walk on the host sketch, batched on the CMS kernels."""
+    host = SizeAwareWTinyLFU(10_000, expected_entries=64)
+    assert host.data_plane == "scalar"
+    cms = SizeAwareWTinyLFU(10_000, expected_entries=64, sketch_backend="cms")
+    assert cms.data_plane == "batched"
+    pinned = SizeAwareWTinyLFU(10_000, expected_entries=64, data_plane="batched")
+    assert pinned.data_plane == "batched"
+    with pytest.raises(ValueError, match="data_plane"):
+        SizeAwareWTinyLFU(10_000, expected_entries=64, data_plane="bogus")
+
+
+def test_make_admission_validates_name():
+    from repro.core.sketch import FrequencySketch
+
+    sk = FrequencySketch(64)
+    assert make_admission("iv", sk).name == "iv"
+    assert make_admission("AV", sk, early_pruning=False).early_pruning is False
+    with pytest.raises(ValueError, match="admission"):
+        make_admission("bogus", sk)
+
+
+class TestPeekVictims:
+    @pytest.mark.parametrize("name", EVICTIONS)
+    def test_matches_iter_victims_seeded_sweep(self, name):
+        rnd = random.Random(7)
+        for trial in range(30):
+            n = rnd.randint(1, 50)
+            entries = [(k, rnd.randint(1, 400)) for k in rnd.sample(range(10_000), n)]
+            hot = [k for k, _ in entries if rnd.random() < 0.3]
+            e = _filled_eviction(name, entries, hot_accesses=hot)
+            total = sum(s for _, s in entries)
+            for needed in (0, 1, rnd.randint(1, max(1, total)), total, total + 123):
+                _check_peek_equivalence(e, needed)
+
+    @pytest.mark.parametrize("name", EVICTIONS)
+    @settings(max_examples=25, deadline=None, suppress_health_check=(HealthCheck.too_slow,))
+    @given(
+        entries=st.lists(
+            st.tuples(st.integers(0, 10_000), st.integers(1, 400)),
+            min_size=1,
+            max_size=40,
+            unique_by=lambda kv: kv[0],
+        ),
+        needed_frac=st.floats(0.0, 1.5),
+    )
+    def test_matches_iter_victims_property(self, name, entries, needed_frac):
+        e = _filled_eviction(name, entries)
+        needed = int(sum(s for _, s in entries) * needed_frac)
+        _check_peek_equivalence(e, needed)
+
+    def test_empty_and_nonpositive_needed(self):
+        for name in EVICTIONS:
+            e = _filled_eviction(name, [(1, 10)])
+            for needed in (0, -5):
+                keys, sizes = e.peek_victims(needed)
+                assert len(keys) == 0 and len(sizes) == 0
+
+    def test_peek_stability_flags(self):
+        assert _filled_eviction("lru", [(1, 1)]).peek_stable
+        assert _filled_eviction("slru", [(1, 1)]).peek_stable
+        for name in EVICTIONS[2:]:
+            assert not _filled_eviction(name, [(1, 1)]).peek_stable
+
+
+def _run_both_planes(spec, tr, cap, **kw):
+    out = []
+    for plane in ("scalar", "batched"):
+        p = REGISTRY.build(spec, cap, data_plane=plane, **kw)
+        rec = HitMaskRecorder()
+        SimulationEngine(instruments=(rec,)).run(p, tr)
+        out.append((p, rec.hits))
+    return out
+
+
+def _assert_byte_identical(a, b, hits_a, hits_b, label=""):
+    assert np.array_equal(hits_a, hits_b), f"{label}: hit/miss streams diverge"
+    sa, sb = a.stats, b.stats
+    for field in ("accesses", "hits", "bytes_hit", "victims_examined",
+                  "admissions", "rejections", "evictions"):
+        assert getattr(sa, field) == getattr(sb, field), f"{label}: stats.{field}"
+    assert list(a.window.items()) == list(b.window.items()), f"{label}: window"
+    assert a.main.sizes == b.main.sizes, f"{label}: main contents"
+    assert a.used_bytes() == b.used_bytes(), f"{label}: used bytes"
+
+
+class TestBatchedScalarEquivalence:
+    @pytest.mark.parametrize("trace_name", sorted(TRACE_SPECS))
+    def test_every_trace_class(self, trace_name):
+        """Acceptance: byte-identical decisions + CacheStats on every
+        TRACE_SPECS class (default wtlfu-av-slru)."""
+        tr = make_trace(trace_name, seed=11, scale=0.002)
+        cap = max(1, int(tr.total_object_bytes * 0.02))
+        kw = dict(expected_entries=max(64, int(cap / tr.mean_object_size)))
+        (a, ha), (b, hb) = _run_both_planes("wtlfu-av", tr, cap, **kw)
+        assert not a.stats.hits == 0 or len(tr) < 100  # sanity: trace exercised
+        _assert_byte_identical(a, b, ha, hb, trace_name)
+
+    @pytest.mark.parametrize("admission", ("iv", "qv", "av"))
+    @pytest.mark.parametrize("eviction", EVICTIONS)
+    def test_every_admission_eviction_combo(self, admission, eviction):
+        tr = make_trace("msr2", seed=5, scale=0.003)
+        cap = max(1, int(tr.total_object_bytes * 0.02))
+        spec = f"wtlfu-{admission}-{eviction}"
+        kw = dict(expected_entries=max(64, int(cap / tr.mean_object_size)))
+        (a, ha), (b, hb) = _run_both_planes(spec, tr, cap, **kw)
+        _assert_byte_identical(a, b, ha, hb, spec)
+
+    @pytest.mark.parametrize("spec", ("wtlfu-av?early_pruning=0", "wtlfu-av?early_pruning=0&eviction=random"))
+    def test_av_without_pruning(self, spec):
+        tr = make_trace("cdn1", seed=5, scale=0.002)
+        cap = max(1, int(tr.total_object_bytes * 0.05))
+        (a, ha), (b, hb) = _run_both_planes(spec, tr, cap, expected_entries=256)
+        _assert_byte_identical(a, b, ha, hb, spec)
+
+    @settings(max_examples=20, deadline=None, suppress_health_check=(HealthCheck.too_slow,))
+    @given(
+        keys=st.lists(st.integers(0, 40), min_size=30, max_size=300),
+        admission=st.sampled_from(("iv", "qv", "av")),
+        eviction=st.sampled_from(EVICTIONS),
+    )
+    def test_property_random_streams(self, keys, admission, eviction):
+        """Property: the planes agree on arbitrary small access streams."""
+        sizes = [(k * 37) % 90 + 10 for k in keys]
+        tr = list(zip(keys, sizes))
+        planes = []
+        for plane in ("scalar", "batched"):
+            p = SizeAwareWTinyLFU(
+                300, admission=admission, eviction=eviction,
+                window_frac=0.1, expected_entries=64, data_plane=plane,
+            )
+            hits = [p.access(k, s) for k, s in tr]
+            planes.append((p, np.asarray(hits)))
+        (a, ha), (b, hb) = planes
+        _assert_byte_identical(a, b, ha, hb, f"{admission}/{eviction}")
+
+
+class TestOneBatchedCallPerDecision:
+    @pytest.mark.parametrize("admission", ("iv", "qv", "av"))
+    def test_no_scalar_estimates_on_hot_path(self, admission):
+        """Acceptance: one estimate_batch call per admission decision, zero
+        per-victim Python estimate calls (default SLRU main)."""
+        tr = make_trace("msr2", seed=9, scale=0.003)
+        cap = max(1, int(tr.total_object_bytes * 0.02))
+        p = SizeAwareWTinyLFU(
+            cap, admission=admission, data_plane="batched",
+            expected_entries=max(64, int(cap / tr.mean_object_size)),
+        )
+        counts = {"batch": 0, "scalar": 0, "decisions": 0}
+        sk = p.sketch
+        orig_estimate = sk.estimate
+
+        def spy_estimate(key):
+            counts["scalar"] += 1
+            return orig_estimate(key)
+
+        def spy_batch(keys):
+            counts["batch"] += 1
+            return [orig_estimate(int(k)) for k in keys]
+
+        sk.estimate = spy_estimate
+        sk.estimate_batch = spy_batch
+        p.admission_policy.estimate_batch = spy_batch  # rebind data-plane hook
+        orig_admit = p._admit
+
+        def spy_admit(*args):
+            counts["decisions"] += 1
+            return orig_admit(*args)
+
+        p._admit = spy_admit
+
+        SimulationEngine().run(p, tr)
+        assert counts["decisions"] > 50, "trace too small to be meaningful"
+        assert counts["batch"] == counts["decisions"]
+        assert counts["scalar"] == 0
+
+
+class TestFusedSketchPath:
+    def _drive(self, fused: bool):
+        from repro.core.cms_sketch import CMSSketch
+
+        sk = CMSSketch(128, flush_block=64 if fused else 1_000_000)
+        rnd = random.Random(3)
+        outs = []
+        for _ in range(20):
+            sk.increment_batch([rnd.randint(0, 500) for _ in range(rnd.randint(0, 50))])
+            if not fused:
+                sk.flush()  # staged: flush first, estimate on a clean table
+            outs.append(sk.estimate_batch([rnd.randint(0, 500) for _ in range(5)]).tolist())
+        return outs, np.asarray(sk.table).tolist(), sk.resets, sk._ops
+
+    def test_fused_equals_staged_flush_then_estimate(self):
+        """The fused update+estimate kernel call must be indistinguishable
+        from flush() followed by a plain estimate."""
+        assert self._drive(fused=True) == self._drive(fused=False)
+
+    def test_fused_respects_reset_boundary(self):
+        from repro.core.cms_sketch import CMSSketch
+
+        def run(flush_block):
+            sk = CMSSketch(16, sample_factor=10, flush_block=flush_block)
+            outs = []
+            for i in range(6):
+                sk.increment_batch(list(range(i * 40, i * 40 + 40)))
+                outs.append(sk.estimate_batch([1, 2, 3]).tolist())
+            return outs, sk.resets
+
+        # flush_block=8 forces the staged path; 512 allows fusing — results
+        # must agree even when batches straddle the aging reset.
+        assert run(8) == run(512)

@@ -40,6 +40,28 @@ class TestCMSKernel:
         table = cms_ops.update(table, keys, cap=15)
         assert int(cms_ops.estimate(table, jnp.asarray([42], jnp.int32))[0]) == 15
 
+    @pytest.mark.parametrize("width", [512, 2048])
+    @pytest.mark.parametrize("n_upd,n_est", [(1, 1), (64, 7), (300, 33)])
+    def test_fused_update_estimate_matches_staged(self, width, n_upd, n_est):
+        """The fused one-launch op == update followed by estimate, on both
+        the Pallas (interpret) and the jnp reference path."""
+        rng = np.random.default_rng(width + n_upd + n_est)
+        table = jnp.asarray(rng.integers(0, 12, (cms_ref.ROWS, width)), jnp.int32)
+        upd = jnp.asarray(rng.integers(0, 1 << 31, n_upd), jnp.int32)
+        est = jnp.asarray(rng.integers(0, 1 << 31, n_est), jnp.int32)
+        staged_table = cms_ops.update(table, upd, use_pallas=False)
+        staged_vals = cms_ops.estimate(staged_table, est, use_pallas=False)
+        for use_pallas in (True, False):
+            new_table, vals = cms_ops.update_estimate(table, upd, est, use_pallas=use_pallas)
+            np.testing.assert_array_equal(np.asarray(new_table), np.asarray(staged_table))
+            np.testing.assert_array_equal(np.asarray(vals), np.asarray(staged_vals))
+
+    def test_fused_update_estimate_saturates(self):
+        table = cms_ops.make_table(512)
+        upd = jnp.full((100,), 42, jnp.int32)
+        new_table, vals = cms_ops.update_estimate(table, upd, jnp.asarray([42], jnp.int32), cap=15)
+        assert int(vals[0]) == 15
+
     @settings(max_examples=20, deadline=None)
     @given(st.lists(st.integers(0, 100), min_size=1, max_size=128))
     def test_never_underestimates(self, key_list):

@@ -62,6 +62,63 @@ class TestTraces:
         assert tr.keys.tolist() == [5, 6, 5]
         assert tr.sizes.tolist() == [100, 200, 100]
 
+    def test_text_format_tolerant_parsing(self, tmp_path):
+        """webcachesim-style files: float epoch timestamps, '#' comment
+        headers, blank lines — all must parse instead of crashing."""
+        p = tmp_path / "messy.tr"
+        p.write_text(
+            "# trace: prod-cdn export\n"
+            "# timestamp key size\n"
+            "1618387200.125 5 100\n"
+            "1618387200.375 6 200   # inline annotation\n"
+            "\n"
+            "1618387201.000 5 100\n"
+        )
+        tr = load_trace(p)
+        assert tr.keys.tolist() == [5, 6, 5]
+        assert tr.sizes.tolist() == [100, 200, 100]
+
+    def test_text_format_64bit_keys_exact(self, tmp_path):
+        """Hashed 64-bit object IDs must not round-trip through float64
+        (which would silently merge nearby keys)."""
+        k1, k2 = 2**60 + 1, 2**60 + 3
+        p = tmp_path / "big.tr"
+        p.write_text(f"1618387200.5 {k1} 100\n1618387200.7 {k2} 200\n")
+        tr = load_trace(p)
+        assert tr.keys.tolist() == [k1, k2]
+
+    def test_text_format_csv_delimiter(self, tmp_path):
+        p = tmp_path / "t.csv"
+        p.write_text("# k,s\n7,100\n8,250\n")
+        tr = load_trace(p)
+        assert tr.keys.tolist() == [7, 8]
+        assert tr.sizes.tolist() == [100, 250]
+
+    @pytest.mark.parametrize("suffix", [".tr", ".txt", ".csv"])
+    def test_roundtrip_text(self, tmp_path, suffix):
+        tr = make_trace("msr3", seed=1, scale=0.005)
+        path = tmp_path / f"rt{suffix}"
+        save_trace(tr, path)
+        back = load_trace(path)
+        np.testing.assert_array_equal(tr.keys, back.keys)
+        np.testing.assert_array_equal(tr.sizes, back.sizes)
+
+    @pytest.mark.parametrize(
+        "content, err",
+        [
+            ("", "empty"),
+            ("# only comments\n", "empty"),
+            ("1\n2\n", "column"),
+            ("1 2 3\n4 banana 6\n", "unparseable"),
+            ("5 0\n", "non-positive"),
+        ],
+    )
+    def test_text_format_bad_inputs(self, tmp_path, content, err):
+        p = tmp_path / "bad.tr"
+        p.write_text(content)
+        with pytest.raises(ValueError, match=err):
+            load_trace(p)
+
 
 class TestSLRU:
     def test_probation_then_protected(self):

@@ -7,10 +7,12 @@ plumbing; we report both raw us/access and LRU-subtracted overhead.
 Two extra comparisons track the admission data plane release over release
 in ``BENCH_overhead.json``:
 
-* **Policy level** — every W-TinyLFU policy runs under both admission data
-  planes: ``data_plane=scalar`` (the reference per-victim walk) vs
-  ``data_plane=batched`` (one ``estimate_batch`` call over the lazily
-  gathered victim prefix). Decisions are byte-identical
+* **Policy level** — W-TinyLFU under both admission data planes, for SLRU
+  mains AND the sampled/random mains (counter-based victim sampling makes
+  every eviction peek-stable, so the batched plane covers the full
+  admission x eviction grid): ``data_plane=scalar`` (the reference
+  per-victim walk) vs ``data_plane=batched`` (one ``estimate_batch`` call
+  over the lazily gathered victim prefix). Decisions are byte-identical
   (``hit_ratio_matches_batched`` asserts it), so any delta is pure
   data-plane throughput. On the host sketch the scalar walk is the
   lightweight option (which is why ``auto`` picks it there); the batched
@@ -30,8 +32,20 @@ from .common import PAPER_TRACES, emit, get_trace, run_policy
 
 POLICIES = ("lru", "wtlfu-av", "wtlfu-qv", "wtlfu-iv", "gdsf", "adaptsize", "lhd", "lrb")
 FRACS = (0.001, 0.01, 0.1)
-#: Policies run under both admission data planes (scalar vs batched).
-DATA_PLANE_POLICIES = ("wtlfu-av", "wtlfu-qv", "wtlfu-iv")
+#: Policies run under both admission data planes (scalar vs batched): the
+#: default-SLRU mains plus sampled/random mains — counter-based victim
+#: sampling made every eviction peek-stable, so the batched plane covers
+#: the whole grid (ISSUE 3) and these rows track its cost per combo.
+DATA_PLANE_POLICIES = (
+    "wtlfu-av",
+    "wtlfu-qv",
+    "wtlfu-iv",
+    "wtlfu-av-sampled_frequency",
+    "wtlfu-av-sampled_size",
+    "wtlfu-qv-sampled_frequency_size",
+    "wtlfu-qv-sampled_needed_size",
+    "wtlfu-iv-random",
+)
 #: Victim-set sizes for the sketch-level data-plane comparison.
 SKETCH_BATCH_SIZES = (8, 32, 128)
 
@@ -80,25 +94,25 @@ def main(traces=PAPER_TRACES, fracs=FRACS) -> list[dict]:
                 r["overhead_us"] = round(max(0.0, r["us_per_access"] - lru_us), 3)
                 r["frac"] = frac
                 rows.append(r)
-                if pol in DATA_PLANE_POLICIES:
-                    # Same policy under each admission data plane:
-                    # byte-identical decisions, pure throughput delta.
-                    pair = {}
-                    for plane in ("batched", "scalar"):
-                        rp = run_policy(f"{pol}?data_plane={plane}", tr, cap)
-                        rp["overhead_us"] = round(max(0.0, rp["us_per_access"] - lru_us), 3)
-                        rp["frac"] = frac
-                        rp["data_plane"] = plane
-                        pair[plane] = rp
-                        rows.append(rp)
-                    pair["scalar"]["hit_ratio_matches_batched"] = (
-                        pair["scalar"]["hit_ratio"] == pair["batched"]["hit_ratio"]
-                    )
-                    pair["batched"]["batched_speedup"] = round(
-                        pair["scalar"]["us_per_access"]
-                        / max(1e-9, pair["batched"]["us_per_access"]),
-                        3,
-                    )
+            for pol in DATA_PLANE_POLICIES:
+                # Same policy under each admission data plane:
+                # byte-identical decisions, pure throughput delta.
+                pair = {}
+                for plane in ("batched", "scalar"):
+                    rp = run_policy(f"{pol}?data_plane={plane}", tr, cap)
+                    rp["overhead_us"] = round(max(0.0, rp["us_per_access"] - lru_us), 3)
+                    rp["frac"] = frac
+                    rp["data_plane"] = plane
+                    pair[plane] = rp
+                    rows.append(rp)
+                pair["scalar"]["hit_ratio_matches_batched"] = (
+                    pair["scalar"]["hit_ratio"] == pair["batched"]["hit_ratio"]
+                )
+                pair["batched"]["batched_speedup"] = round(
+                    pair["scalar"]["us_per_access"]
+                    / max(1e-9, pair["batched"]["us_per_access"]),
+                    3,
+                )
     rows.extend(sketch_data_plane_rows())
     emit("overhead", rows, derived_key="overhead_us")
     return rows

@@ -11,20 +11,28 @@ per-interval hit ratio every ``SNAPSHOT_POINTS``-th of the trace.
 JSON lands in ``benchmarks/results/robustness.json``; each row's
 ``snapshots`` list is directly plottable as Fig. 11/12-style curves
 (x = accesses, y = interval_hit_ratio).
+
+Besides the paper's four trace classes, the sweep includes the synthetic
+**workload-shift** traces (``repro.traces.SHIFT_SPECS``): abrupt
+mid-trace phase changes in key popularity and size distribution, the
+adversarial case for slow-adapting policies — shift rows carry the phase
+boundary indices so plots can mark them.
 """
 
 from __future__ import annotations
 
 from repro.core import SimulationEngine
+from repro.traces import SHIFT_SPECS, shift_boundaries
 
-from .common import PAPER_TRACES, emit, get_trace, run_policy
+from .common import PAPER_TRACES, bench_scale, emit, get_trace, run_policy
 
 POLICIES = ("wtlfu-av", "wtlfu-qv", "wtlfu-iv", "lru", "gdsf", "adaptsize", "lhd")
+TRACES = PAPER_TRACES + tuple(sorted(SHIFT_SPECS))
 FRACS = (0.01, 0.1)
 SNAPSHOT_POINTS = 20  # snapshots per run
 
 
-def main(traces=PAPER_TRACES, fracs=FRACS, policies=POLICIES) -> list[dict]:
+def main(traces=TRACES, fracs=FRACS, policies=POLICIES) -> list[dict]:
     rows = []
     for tname in traces:
         tr = get_trace(tname)
@@ -36,6 +44,8 @@ def main(traces=PAPER_TRACES, fracs=FRACS, policies=POLICIES) -> list[dict]:
                 r = run_policy(pol, tr, cap, engine=engine, with_snapshots=True)
                 r["frac"] = frac
                 r["snapshot_every"] = snapshot_every
+                if tname in SHIFT_SPECS:
+                    r["phase_boundaries"] = shift_boundaries(tname, scale=bench_scale())
                 # Fig. 11/12 headline: how far the worst interval sags below
                 # the mean (lower sag = more robust over time).
                 intervals = [s["interval_hit_ratio"] for s in r["snapshots"]]

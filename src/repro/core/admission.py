@@ -41,12 +41,21 @@ discipline:
   scores.
 
 The replay shortcut requires the victim order to be *peek-stable*
-(deterministic snapshot; see :attr:`EvictionPolicy.peek_stable`): LRU and
-SLRU qualify, the sampling policies do not (their victim stream draws from
-a live key list, so gathering more victims than the scalar walk would have
-examined perturbs the RNG stream). On non-peek-stable policies, QV and
-pruned AV fall back to the scalar walk — IV and unpruned AV stay batched
-everywhere, because their gather phase is estimate-free.
+(deterministic replay; see :attr:`EvictionPolicy.peek_stable`). Every
+built-in eviction policy qualifies: LRU/SLRU walk deterministic snapshots,
+and the sampling policies draw victim samples from a counter-based RNG
+stream (:mod:`repro.core.crng`) that is a pure function of the decision
+index — gathering more victims than the scalar walk would have examined
+replays draws instead of consuming them, so over-pulling cannot leak into
+later decisions. The scalar-walk fallbacks below (QV and pruned AV on
+``peek_stable=False`` mains) remain only for third-party stateful-RNG
+policies.
+
+Decision-counter contract: the caller advances ``main.begin_decision()``
+exactly once per admission decision, before invoking either plane —
+:meth:`SizeAwareWTinyLFU._evict_or_admit` is that single call site. The
+bump lives *outside* ``admit``/``admit_scalar`` so the batched plane's
+fallback delegation to the scalar plane cannot double-advance the stream.
 """
 
 from __future__ import annotations
@@ -141,7 +150,9 @@ class AdmissionPolicy:
     main_cap``), which guarantees the victim walk can always cover
     ``needed``. Both mutate ``main`` (evict/insert/promote) and ``stats``
     (victims_examined / evictions / admissions / rejections) and return
-    True iff the candidate was admitted.
+    True iff the candidate was admitted. Callers advance
+    ``main.begin_decision()`` once per decision first (see the module
+    docstring); neither plane advances it itself.
     """
 
     name: str

@@ -18,20 +18,26 @@ so the interface exposes two victim views:
   property tests); LRU/SLRU override it to walk their order dicts directly,
   touching O(prefix) entries where ``iter_victims`` snapshots O(n).
 
-Policies whose victim order is a deterministic snapshot (peeking consumes no
-RNG state and interleaved evictions cannot reorder unseen victims) advertise
-``peek_stable = True``; the batched admission plane falls back to the scalar
-walk on the others (sampling policies draw from a live key list, so
-pre-gathering would perturb the RNG stream).
+Every built-in policy advertises ``peek_stable = True``: its victim order is
+a pure function of the policy state plus (for the sampling policies) a
+counter-based RNG stream (:mod:`repro.core.crng`), so peeking consumes no
+state and evicting already-yielded victims cannot reorder unseen ones. The
+sampling policies draw victim samples as ``draw(seed, decision, i)`` — the
+**decision counter** advances only through :meth:`begin_decision` (called
+once per admission decision by
+:class:`~repro.core.tinylfu.SizeAwareWTinyLFU`), never by walking — which is
+what lets the batched admission data plane pre-gather a victim prefix
+without perturbing the stream the scalar walk replays.
 """
 
 from __future__ import annotations
 
-import random
 from collections import OrderedDict
-from typing import Callable, Iterator
+from typing import Callable, Iterator, Sequence
 
 import numpy as np
+
+from . import crng
 
 __all__ = [
     "EvictionPolicy",
@@ -46,7 +52,7 @@ __all__ = [
 class EvictionPolicy:
     """Bookkeeping for cached entries; selects victims. Sizes in bytes."""
 
-    #: True when the victim order is a deterministic snapshot: peeking draws
+    #: True when the victim order is a deterministic replay: peeking draws
     #: no RNG state and evicting already-yielded victims cannot change which
     #: victims follow. Enables the single-batch admission data plane.
     peek_stable: bool = False
@@ -80,6 +86,16 @@ class EvictionPolicy:
         self.on_access(key)
 
     # -- victim selection --------------------------------------------------
+    def begin_decision(self) -> None:
+        """Advance the victim stream to a fresh decision.
+
+        Called once per admission decision (both data planes, same call
+        site), *before* any victim walk of that decision. Deterministic
+        policies need no per-decision state, so the default is a no-op; the
+        sampling policies advance their counter-based RNG stream here —
+        walking/peeking itself never does.
+        """
+
     def iter_victims(self, needed: int = 0) -> Iterator[int]:
         """Yield distinct victim candidates in eviction order, without evicting.
 
@@ -97,16 +113,14 @@ class EvictionPolicy:
         Returns parallel int64 ``(keys, sizes)`` arrays: the victims
         :meth:`iter_victims` would yield, truncated at the first point where
         their cumulative size reaches ``needed`` (every victim if the whole
-        cache cannot cover it; empty for ``needed <= 0``). Never evicts or
-        reorders — but on the sampling policies the walk necessarily draws
-        from the policy's RNG (their victim stream IS random draws), so
-        peeking advances the stream exactly as one :meth:`iter_victims`
-        gather would; peek-stable policies are side-effect free. This is
-        the device-handoff view (keys must be int64-representable); the
-        in-process admission plane streams the same walk lazily through
-        ``_peek_iter`` instead (see :class:`repro.core.admission` — that
-        path also carries arbitrary-precision keys such as the serving
-        prefix cache's hashes).
+        cache cannot cover it; empty for ``needed <= 0``). Never evicts,
+        reorders, or consumes RNG state — the sampling policies replay the
+        current decision's counter-based draw stream, so peeking and then
+        walking see identical victims. This is the device-handoff view
+        (keys must be int64-representable); the in-process admission plane
+        streams the same walk lazily through ``_peek_iter`` instead (see
+        :class:`repro.core.admission` — that path also carries
+        arbitrary-precision keys such as the serving prefix cache's hashes).
         """
         keys: list[int] = []
         vsizes: list[int] = []
@@ -234,21 +248,59 @@ class SampledEviction(EvictionPolicy):
 
     Rules (paper Section 5): ``frequency`` (lowest sketch frequency),
     ``size`` (largest size), ``frequency_size`` (lowest frequency/size),
-    ``needed_size`` (size closest to the space needed).
+    ``needed_size`` (size closest to the space needed); ``random`` is the
+    internal 1-sample rule behind :class:`RandomEviction`.
     Maintains a swap-remove list for O(1) uniform sampling.
+
+    Sampling is **counter-based** (:mod:`repro.core.crng`): the ``i``-th
+    draw of a walk is ``draw(seed, decision, i) % len(keys)``, a pure
+    function of the policy seed and the decision counter. One walk =
+    one decision's draw stream, consumed ``SAMPLE`` draws per step from
+    index 0; replaying a walk (peek, then the admission replay) reproduces
+    it exactly, and draws beyond the point a shorter walk stops at cannot
+    leak into later decisions. ``iter_victims`` snapshots the key list at
+    call time so interleaved evictions of already-yielded victims (QV's
+    scalar walk) cannot perturb the remaining stream; ``_peek_iter`` walks
+    the live list under the no-mutation-while-pulling contract — both see
+    the same keys in the same slots, hence the same victims.
+
+    When ``freq_batch_fn`` is given (the CMS backend's ``estimate_batch``),
+    the walk prefetches draws for a whole block of steps in one vectorized
+    ``rng → indices → keys`` gather and scores the block's sample pool with
+    ONE batched sketch call; otherwise each step scores its ≤5-key pool
+    through scalar ``freq_fn`` calls (the paper's lightweight host path).
+    Frequencies are estimate-only (no sketch writes land mid-decision), so
+    block granularity cannot change which victims are selected.
     """
 
     SAMPLE = 5
+    peek_stable = True
+    RULES = ("frequency", "size", "frequency_size", "needed_size", "random")
+    #: Rules whose scoring reads the frequency sketch.
+    _FREQ_RULES = frozenset(("frequency", "frequency_size"))
 
-    def __init__(self, rule: str, freq_fn: Callable[[int], int], seed: int = 0x5EED):
+    def __init__(
+        self,
+        rule: str,
+        freq_fn: Callable[[int], int],
+        seed: int = 0x5EED,
+        freq_batch_fn: "Callable[[list[int]], Sequence[int]] | None" = None,
+    ):
         super().__init__()
-        if rule not in ("frequency", "size", "frequency_size", "needed_size"):
+        if rule not in self.RULES:
             raise ValueError(f"unknown sampling rule: {rule}")
         self.rule = rule
         self.freq_fn = freq_fn
+        self.freq_batch_fn = freq_batch_fn
         self.keys: list[int] = []
         self.pos: dict[int, int] = {}
-        self.rng = random.Random(seed)
+        self.seed = int(seed)
+        #: Counter-based RNG stream index; bumped by :meth:`begin_decision`.
+        self.decision = 0
+        #: Walks that exhausted a sample pool (every draw already taken) and
+        #: fell back to the deterministic linear scan — regression-test
+        #: observability for the rejection/fallback path.
+        self.fallback_scans = 0
 
     def insert(self, key: int, size: int) -> None:
         self.sizes[key] = size
@@ -270,49 +322,100 @@ class SampledEviction(EvictionPolicy):
     def promote(self, key: int) -> None:
         pass
 
-    def _score(self, key: int, needed: int) -> float:
-        size = self.sizes[key]
-        if self.rule == "frequency":
-            return self.freq_fn(key)
-        if self.rule == "size":
-            return -size  # largest size evicted first
-        if self.rule == "frequency_size":
-            return self.freq_fn(key) / size
-        # needed_size: minimize |size - needed| (best memory utilization)
-        return abs(size - needed)
+    def begin_decision(self) -> None:
+        self.decision += 1
 
-    def iter_victims(self, needed: int = 0) -> Iterator[int]:
+    def _score(self, key: int, needed: int, freq: "int | None" = None) -> float:
+        size = self.sizes[key]
+        rule = self.rule
+        if rule == "frequency":
+            return self.freq_fn(key) if freq is None else freq
+        if rule == "size":
+            return -size  # largest size evicted first
+        if rule == "frequency_size":
+            return (self.freq_fn(key) if freq is None else freq) / size
+        if rule == "needed_size":
+            # minimize |size - needed| (best memory utilization)
+            return abs(size - needed)
+        return 0.0  # random: every sampled key ties; min() keeps the first
+
+    def _walk(self, keys: "list[int]", needed: int) -> Iterator[int]:
+        """Yield distinct victims over a fixed ``keys`` view, drawing the
+        current decision's counter-based stream from index 0."""
+        n = len(keys)
+        if n == 0:
+            return
         taken: set[int] = set()
-        n = len(self.keys)
+        sample = self.SAMPLE
+        seed, decision = self.seed, self.decision
+        prefetch = self.freq_batch_fn is not None and self.rule in self._FREQ_RULES
+        freqs: dict[int, int] = {}
+        base = crng.stream_key(seed, decision)
+        if prefetch:
+            # Vectorized gather granularity: enough steps to cover `needed`
+            # at the current mean object size (perf only — the draw stream
+            # is index-addressed, so block size cannot change the victims).
+            mean = max(1, self.used // n)
+            block = min(64, max(4, -(-needed // mean) if needed > 0 else 8))
+        block_pools: list[list[int]] = []  # current block's per-step pools
+        block_base = 0
+        step = 0
         while len(taken) < n:
-            pool = [k for k in (self.rng.choice(self.keys) for _ in range(self.SAMPLE)) if k not in taken]
+            if prefetch:
+                if step - block_base >= len(block_pools):
+                    block_base = step
+                    start = step * sample
+                    idx = crng.draws(seed, decision, start, block * sample) % np.uint64(n)
+                    flat = [keys[i] for i in idx.tolist()]
+                    block_pools = [
+                        flat[j * sample : (j + 1) * sample] for j in range(block)
+                    ]
+                    missing = [k for k in dict.fromkeys(flat) if k not in freqs]
+                    if missing:
+                        freqs.update(zip(missing, map(int, self.freq_batch_fn(missing))))
+                raw = block_pools[step - block_base]
+            else:
+                # Scalar per-step draws: same stream (draws == draw, asserted
+                # in tests), no numpy dispatch on the host hot path.
+                start = step * sample
+                raw = [keys[crng.stream_draw(base, start + j) % n] for j in range(sample)]
+            pool = [k for k in raw if k not in taken]
+            step += 1
             if not pool:
-                # sampled only already-taken keys; fall back to a linear scan
-                pool = [k for k in self.keys if k not in taken]
-                if not pool:
-                    return
-            best = min(pool, key=lambda k: self._score(k, needed))
+                # every draw hit an already-taken key: deterministic linear
+                # scan over the (fixed) key view, consuming no extra draws
+                self.fallback_scans += 1
+                pool = [k for k in keys if k not in taken]
+                if prefetch:
+                    missing = [k for k in pool if k not in freqs]
+                    if missing:
+                        freqs.update(zip(missing, map(int, self.freq_batch_fn(missing))))
+            best = min(pool, key=lambda k: self._score(k, needed, freqs.get(k)))
             taken.add(best)
             yield best
 
+    def iter_victims(self, needed: int = 0) -> Iterator[int]:
+        # Snapshot the key list NOW: the scalar admission walks (QV, IV's
+        # evicting pass) interleave evictions of already-yielded victims
+        # with the walk, which must not perturb the remaining stream.
+        return self._walk(list(self.keys), needed)
+
+    def _peek_iter(self, needed: int) -> Iterator[int]:
+        # Live view — callers must finish pulling before mutating, so the
+        # slots match the snapshot iter_victims would have taken.
+        return self._walk(self.keys, needed)
+
 
 class RandomEviction(SampledEviction):
-    """Uniform random victims (paper's 'Random' baseline)."""
+    """Uniform random victims (paper's 'Random' baseline): a 1-sample walk
+    whose score is constant, so each step takes the drawn key (or the first
+    not-yet-taken key in slot order when the draw collides with one already
+    taken — the same deterministic fallback as the 5-sample policies)."""
+
+    SAMPLE = 1
 
     def __init__(self, seed: int = 0x5EED):
-        super().__init__("frequency", lambda _k: 0, seed)
-
-    def iter_victims(self, needed: int = 0) -> Iterator[int]:
-        taken: set[int] = set()
-        n = len(self.keys)
-        while len(taken) < n:
-            k = self.rng.choice(self.keys)
-            if k in taken:
-                k = next((x for x in self.keys if x not in taken), None)
-                if k is None:
-                    return
-            taken.add(k)
-            yield k
+        super().__init__("random", lambda _k: 0, seed)
 
 
 def make_eviction(
@@ -321,8 +424,13 @@ def make_eviction(
     capacity: int,
     freq_fn: Callable[[int], int],
     seed: int = 0x5EED,
+    freq_batch_fn: "Callable[[list[int]], Sequence[int]] | None" = None,
 ) -> EvictionPolicy:
-    """Factory covering the paper's six Main-cache eviction policies."""
+    """Factory covering the paper's six Main-cache eviction policies.
+
+    ``freq_batch_fn`` (optional, batched-native sketches only) lets the
+    sampled policies score a whole sample block with one sketch call.
+    """
     name = name.lower()
     if name == "lru":
         return LRUEviction()
@@ -331,5 +439,5 @@ def make_eviction(
     if name == "random":
         return RandomEviction(seed)
     if name in ("sampled_frequency", "sampled_size", "sampled_frequency_size", "sampled_needed_size"):
-        return SampledEviction(name.removeprefix("sampled_"), freq_fn, seed)
+        return SampledEviction(name.removeprefix("sampled_"), freq_fn, seed, freq_batch_fn)
     raise ValueError(f"unknown eviction policy: {name}")

@@ -44,11 +44,21 @@ _SCALAR_TYPES = {"int": int, "float": float, "bool": bool, "str": str}
 
 
 def parse_scalar(text: str) -> Any:
-    """Best-effort literal parse of a spec-string value (int, float, str)."""
+    """Best-effort literal parse of a spec-string value (int, float, str).
+
+    Ints accept the ``0x``/``0o``/``0b`` prefixes (seeds read naturally as
+    hex: ``wtlfu-av-random?seed=0x5EED``); they normalize to plain ints, so
+    ``to_string`` re-renders them in decimal and the *value* round-trips.
+    """
     try:
         return int(text)
     except ValueError:
         pass
+    if text.lstrip("+-")[:2].lower() in ("0x", "0o", "0b"):
+        try:
+            return int(text, 0)
+        except ValueError:
+            pass
     try:
         return float(text)
     except ValueError:

@@ -94,6 +94,10 @@ class SizeAwareWTinyLFU:
     window_frac: Window share of ``capacity`` (paper uses 1%).
     expected_entries: sketch sizing hint (≈ capacity / mean object size).
     early_pruning: AV's early-pruning optimization (Alg. 4 lines 6-7).
+    seed: victim-sampling RNG seed for the sampled/random evictions
+        (counter-based, see :mod:`repro.core.crng`); spec-string
+        ``?seed=`` (decimal or ``0x...`` hex) plumbs it through the
+        registry and round-trips via ``PolicySpec.parse``/``to_string``.
     sketch_backend: ``"host"`` (pure-Python sketch) or ``"cms"`` (batched
         Pallas count-min-sketch kernels; increments are buffered and
         flushed lazily before estimates, which is exactly equivalent to
@@ -157,9 +161,20 @@ class SizeAwareWTinyLFU:
         # Window: plain LRU over (key -> size).
         self.window: OrderedDict[int, int] = OrderedDict()
         self.window_bytes = 0
-        # Main: pluggable eviction policy (owns its size map).
+        # Main: pluggable eviction policy (owns its size map). Batched-native
+        # sketches also hand the sampled policies their one-call pool scorer
+        # (the vectorized sample-gather feeds a single estimate_batch /
+        # fused update+estimate kernel launch per walk block).
         self.main: EvictionPolicy = make_eviction(
-            eviction, capacity=self.main_cap, freq_fn=self.sketch.estimate, seed=seed
+            eviction,
+            capacity=self.main_cap,
+            freq_fn=self.sketch.estimate,
+            seed=seed,
+            freq_batch_fn=(
+                self.sketch.estimate_batch
+                if getattr(self.sketch, "batched_native", False)
+                else None
+            ),
         )
         # Admission: IV/QV/AV arbitration over (sketch, main).
         kw = {"early_pruning": early_pruning} if admission == "av" else {}
@@ -261,7 +276,10 @@ class SizeAwareWTinyLFU:
             vk, vs = self.window.popitem(last=False)
             self.window_bytes -= vs
             self._evict_or_admit(vk, vs)
-        it = self.main.iter_victims(0)
+        self.main.begin_decision()  # drain walk gets its own RNG stream
+        # Pass the actual overflow so size-targeting rules (needed_size)
+        # pick victims that clear it in few evictions, not smallest-first.
+        it = self.main.iter_victims(max(0, self.main.used - self.main_cap))
         while self.main.used > self.main_cap and len(self.main):
             v = next(it, None)
             if v is None:
@@ -303,4 +321,7 @@ class SizeAwareWTinyLFU:
             self.main.insert(key, size)
             self.stats.admissions += 1
             return
+        # Single per-decision RNG-stream advance, shared by both data planes
+        # (see repro.core.admission): victim walks replay, never consume.
+        self.main.begin_decision()
         self._admit(key, size, size - free, self.main, self.stats)

@@ -8,11 +8,106 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.core.crng import GAMMA as _CRNG_GAMMA
+from repro.core.crng import MIX_M1 as _MIX_M1
+from repro.core.crng import MIX_M2 as _MIX_M2
 
 from .cms import cms_estimate_pallas, cms_update_estimate_pallas, cms_update_pallas
 from .ref import ROWS, cms_estimate_ref, cms_update_estimate_ref, cms_update_ref, row_indexes
 
-__all__ = ["make_table", "update", "estimate", "update_estimate", "reset", "DeviceSketch"]
+__all__ = [
+    "make_table",
+    "update",
+    "estimate",
+    "update_estimate",
+    "reset",
+    "counter_draws",
+    "DeviceSketch",
+]
+
+# -- device-side counter RNG (splitmix64 in uint32 limbs) --------------------
+#
+# The sampled evictions' victim draws are ``repro.core.crng.draws(seed,
+# decision, i)`` — pure splitmix64 of the decision index. This section
+# reproduces that stream on device bit-for-bit WITHOUT 64-bit integers
+# (device JAX runs without x64; TPUs have no native s64): a 64-bit word is
+# carried as (hi, lo) uint32 lanes and the two splitmix64 multiplies are
+# done in 16-bit limbs so no partial product or carry chain ever overflows
+# uint32. Constants come from repro.core.crng (the single source of truth),
+# so host and device streams cannot silently diverge. It is the sampling
+# building block for a future device-resident admission plane (ROADMAP),
+# validated against the host stream in tests/test_kernels.py.
+
+_U16 = jnp.uint32(0xFFFF)
+
+
+def _mul64_const(hi, lo, const: int):
+    """(hi, lo) uint32 × 64-bit python ``const``, mod 2**64.
+
+    16-bit limb schoolbook multiply; every partial sum is kept < 2**32
+    (the top limb may wrap — harmless, only its low 16 bits are used).
+    """
+    a0, a1 = lo & _U16, lo >> jnp.uint32(16)
+    a2, a3 = hi & _U16, hi >> jnp.uint32(16)
+    c0, c1, c2, c3 = (jnp.uint32((const >> s) & 0xFFFF) for s in (0, 16, 32, 48))
+    p = a0 * c0
+    r0 = p & _U16
+    k = p >> jnp.uint32(16)
+    t = k + a0 * c1
+    k = t >> jnp.uint32(16)
+    t = (t & _U16) + a1 * c0
+    k = k + (t >> jnp.uint32(16))
+    r1 = t & _U16
+    t = k + a0 * c2
+    k = t >> jnp.uint32(16)
+    t = (t & _U16) + a1 * c1
+    k = k + (t >> jnp.uint32(16))
+    t = (t & _U16) + a2 * c0
+    k = k + (t >> jnp.uint32(16))
+    r2 = t & _U16
+    r3 = (k + a0 * c3 + a1 * c2 + a2 * c1 + a3 * c0) & _U16
+    return (r3 << jnp.uint32(16)) | r2, (r1 << jnp.uint32(16)) | r0
+
+
+def _xorshr64(hi, lo, k: int):
+    """x ^= x >> k (0 < k < 32) on (hi, lo) uint32 lanes."""
+    return hi ^ (hi >> jnp.uint32(k)), lo ^ ((lo >> jnp.uint32(k)) | (hi << jnp.uint32(32 - k)))
+
+
+def _mix64_u32(hi, lo):
+    """Stafford mix13 on (hi, lo) — the device twin of ``crng.mix64_vec``."""
+    hi, lo = _xorshr64(hi, lo, 30)
+    hi, lo = _mul64_const(hi, lo, _MIX_M1)
+    hi, lo = _xorshr64(hi, lo, 27)
+    hi, lo = _mul64_const(hi, lo, _MIX_M2)
+    return _xorshr64(hi, lo, 31)
+
+
+@jax.jit
+def _counter_draws_u32(idx_hi, idx_lo, base_hi, base_lo):
+    hi, lo = _mul64_const(idx_hi, idx_lo, _CRNG_GAMMA)
+    return jnp.stack(_mix64_u32(hi ^ base_hi, lo ^ base_lo))
+
+
+def counter_draws(seed: int, decision: int, start: int, count: int) -> jax.Array:
+    """Device twin of :func:`repro.core.crng.draws`.
+
+    Returns a ``[2, count] uint32`` array — row 0 the high 32 bits, row 1
+    the low 32 bits of draws ``start .. start+count-1`` of the given
+    decision's stream, bit-identical to the host uint64 values.
+    """
+    from repro.core import crng
+
+    base = crng.stream_key(seed, decision)
+    idx = np.arange(start, start + count, dtype=np.uint64)
+    return _counter_draws_u32(
+        jnp.asarray((idx >> np.uint64(32)).astype(np.uint32)),
+        jnp.asarray((idx & np.uint64(0xFFFFFFFF)).astype(np.uint32)),
+        jnp.uint32(base >> 32),
+        jnp.uint32(base & 0xFFFFFFFF),
+    )
 
 
 def make_table(width: int) -> jax.Array:

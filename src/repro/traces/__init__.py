@@ -1,7 +1,24 @@
 """Trace substrate: synthetic generators calibrated to the paper's trace
-classes (Table 1 / Fig. 8) and simple on-disk trace formats."""
+classes (Table 1 / Fig. 8), workload-shift stress traces, and simple
+on-disk trace formats."""
 
 from .formats import load_trace, save_trace
-from .synthetic import TRACE_SPECS, make_trace, paper_traces
+from .synthetic import (
+    SHIFT_SPECS,
+    TRACE_SPECS,
+    ShiftSpec,
+    make_trace,
+    paper_traces,
+    shift_boundaries,
+)
 
-__all__ = ["make_trace", "paper_traces", "TRACE_SPECS", "load_trace", "save_trace"]
+__all__ = [
+    "make_trace",
+    "paper_traces",
+    "TRACE_SPECS",
+    "SHIFT_SPECS",
+    "ShiftSpec",
+    "shift_boundaries",
+    "load_trace",
+    "save_trace",
+]

@@ -27,7 +27,15 @@ import numpy as np
 
 from repro.core.cache_api import AccessTrace
 
-__all__ = ["TraceSpec", "TRACE_SPECS", "make_trace", "paper_traces"]
+__all__ = [
+    "TraceSpec",
+    "TRACE_SPECS",
+    "ShiftSpec",
+    "SHIFT_SPECS",
+    "shift_boundaries",
+    "make_trace",
+    "paper_traces",
+]
 
 KB = 1024
 MB = 1024 * KB
@@ -107,29 +115,20 @@ def _zipf_pmf(n: int, alpha: float) -> np.ndarray:
     return pmf / pmf.sum()
 
 
-def make_trace(spec: TraceSpec | str, *, seed: int = 0, scale: float = 1.0) -> AccessTrace:
-    """Generate a trace; ``scale`` shrinks both accesses and object count."""
-    if isinstance(spec, str):
-        spec = TRACE_SPECS[spec]
-    # crc32, NOT hash(): str hashing is randomized per process, which would
-    # make "the same trace" differ between runs (and made tests flaky).
-    rng = np.random.default_rng([seed, zlib.crc32(spec.name.encode()) & 0x7FFFFFFF])
-    n_acc = max(1000, int(spec.n_accesses * scale))
-    n_obj = max(100, int(spec.n_objects * scale))
-
-    # Popularity-driven base stream.
-    n_popular = max(10, int(n_obj * (1.0 - spec.one_hit_frac)))
+def _index_stream(spec: TraceSpec, rng: np.random.Generator, n_acc: int,
+                  n_obj: int, n_popular: int) -> np.ndarray:
+    """Zipf + one-hit-wonder + recency access stream in local *object index*
+    space (``[0, n_obj)``); callers map indices onto object ids. The RNG
+    call order matches the original inline generator, so traces built
+    through this helper are byte-identical to pre-refactor ones."""
     pmf = _zipf_pmf(n_popular, spec.zipf_alpha)
-    # Shuffle object ids so key order is uncorrelated with popularity rank.
-    ids = rng.permutation(n_obj).astype(np.int64)
     base = rng.choice(n_popular, size=n_acc, p=pmf)
-    keys = ids[base]
 
     # One-hit wonders: sprinkle unique objects over the stream.
     n_ohw = n_obj - n_popular
     if n_ohw > 0:
         pos = rng.choice(n_acc, size=min(n_ohw, n_acc // 4), replace=False)
-        keys[pos] = ids[n_popular + np.arange(len(pos))]
+        base[pos] = n_popular + np.arange(len(pos))
 
     # Recency process: some accesses repeat a recent access.
     rec_mask = rng.random(n_acc) < spec.p_recency
@@ -139,12 +138,125 @@ def make_trace(spec: TraceSpec | str, *, seed: int = 0, scale: float = 1.0) -> A
     idxs = np.nonzero(apply)[0]
     src_idx = src[idxs]
     for i, s in zip(idxs.tolist(), src_idx.tolist()):  # sequential: refs may chain
-        keys[i] = keys[s]
+        base[i] = base[s]
+    return base
 
+
+@dataclasses.dataclass(frozen=True)
+class ShiftSpec:
+    """A workload-shift trace: phases with different popularity orderings
+    and size distributions, concatenated (paper Figs. 11-12 stress
+    robustness over time; this stresses it across an abrupt shift).
+
+    ``overlap_frac`` of each later phase's popular ranks carry over objects
+    from the previous phase (with their original sizes — object sizes stay
+    stable trace-wide); the rest of the universe is fresh, so the hot set
+    genuinely moves at every boundary.
+    """
+
+    name: str
+    phases: tuple[TraceSpec, ...]
+    overlap_frac: float = 0.15
+
+
+SHIFT_SPECS: dict[str, ShiftSpec] = {
+    # two phases: clustered-small-object MSR-like -> large-object lognormal
+    "shift1": ShiftSpec("shift1", (
+        TraceSpec("shift1:p0", 400_000, 120_000, 0.95, 0.35, 1_500, "clustered",
+                  ((8 * KB, 0.55), (64 * KB, 0.45))),
+        TraceSpec("shift1:p1", 400_000, 120_000, 0.95, 0.35, 1_500, "lognormal",
+                  (13.8, 1.0, 64 * KB, 4 * MB)),
+    )),
+    # three phases with higher carry-over: skew flip + size regime changes
+    "shift2": ShiftSpec("shift2", (
+        TraceSpec("shift2:p0", 300_000, 90_000, 1.05, 0.30, 2_000, "clustered",
+                  ((4 * KB, 0.6), (32 * KB, 0.4))),
+        TraceSpec("shift2:p1", 300_000, 90_000, 0.75, 0.45, 2_000, "heavytail",
+                  (14.0, 2.0, 1 * KB, 256 * MB, 1.3, 0.05)),
+        TraceSpec("shift2:p2", 300_000, 90_000, 0.95, 0.35, 2_000, "clustered",
+                  ((16 * KB, 0.5), (128 * KB, 0.5))),
+    ), overlap_frac=0.25),
+}
+
+_ID_MULT = np.int64(2654435761)  # odd: x -> x*c mod 2^40 is a bijection
+_ID_SPACE = np.int64(1 << 40)
+
+
+def shift_boundaries(spec: "ShiftSpec | str", *, scale: float = 1.0) -> list[int]:
+    """Access indices where each later phase of a shift trace begins (same
+    per-phase scaling rule as :func:`make_trace`)."""
+    if isinstance(spec, str):
+        spec = SHIFT_SPECS[spec]
+    bounds, acc = [], 0
+    for phase in spec.phases[:-1]:
+        acc += max(1000, int(phase.n_accesses * scale))
+        bounds.append(acc)
+    return bounds
+
+
+def _make_shift_trace(spec: ShiftSpec, seed: int, scale: float) -> AccessTrace:
+    all_keys: list[np.ndarray] = []
+    all_sizes: list[np.ndarray] = []
+    size_of: dict[int, int] = {}  # id -> stable size, across phases
+    prev_ids: np.ndarray | None = None
+    id_offset = 0
+    for p, phase in enumerate(spec.phases):
+        rng = np.random.default_rng(
+            [seed, zlib.crc32(spec.name.encode()) & 0x7FFFFFFF, p])
+        n_acc = max(1000, int(phase.n_accesses * scale))
+        n_obj = max(100, int(phase.n_objects * scale))
+        n_popular = max(10, int(n_obj * (1.0 - phase.one_hit_frac)))
+        # Fresh universe for this phase, pre-mapped to final id space
+        # (disjoint offsets + odd-multiplier bijection keep phases disjoint).
+        ids = (rng.permutation(n_obj).astype(np.int64) + id_offset) * _ID_MULT % _ID_SPACE
+        id_offset += n_obj
+        sizes_per_obj = _sample_sizes(phase, n_obj, rng)
+        if prev_ids is not None and spec.overlap_frac > 0:
+            # Carry over previous-phase objects into a slice of the popular
+            # ranks; they keep their established sizes.
+            n_carry = min(int(n_popular * spec.overlap_frac), len(prev_ids))
+            carried = rng.choice(prev_ids, size=n_carry, replace=False)
+            slots = rng.choice(n_popular, size=n_carry, replace=False)
+            ids[slots] = carried
+            sizes_per_obj[slots] = [size_of[int(c)] for c in carried]
+        for i, s in zip(ids.tolist(), sizes_per_obj.tolist()):
+            size_of.setdefault(i, s)
+        base = _index_stream(phase, rng, n_acc, n_obj, n_popular)
+        all_keys.append(ids[base])
+        all_sizes.append(sizes_per_obj[base])
+        prev_ids = ids
+    return AccessTrace(
+        spec.name,
+        np.concatenate(all_keys).astype(np.int64),
+        np.concatenate(all_sizes).astype(np.int64),
+    )
+
+
+def make_trace(
+    spec: "TraceSpec | ShiftSpec | str", *, seed: int = 0, scale: float = 1.0
+) -> AccessTrace:
+    """Generate a trace; ``scale`` shrinks both accesses and object count.
+
+    Accepts paper-class names (:data:`TRACE_SPECS`), workload-shift names
+    (:data:`SHIFT_SPECS`) or explicit spec objects.
+    """
+    if isinstance(spec, str):
+        spec = SHIFT_SPECS.get(spec) or TRACE_SPECS[spec]
+    if isinstance(spec, ShiftSpec):
+        return _make_shift_trace(spec, seed, scale)
+    # crc32, NOT hash(): str hashing is randomized per process, which would
+    # make "the same trace" differ between runs (and made tests flaky).
+    rng = np.random.default_rng([seed, zlib.crc32(spec.name.encode()) & 0x7FFFFFFF])
+    n_acc = max(1000, int(spec.n_accesses * scale))
+    n_obj = max(100, int(spec.n_objects * scale))
+    n_popular = max(10, int(n_obj * (1.0 - spec.one_hit_frac)))
+    # Shuffle object ids so key order is uncorrelated with popularity rank.
+    ids = rng.permutation(n_obj).astype(np.int64)
+    keys = ids[_index_stream(spec, rng, n_acc, n_obj, n_popular)]
     sizes_per_obj = _sample_sizes(spec, n_obj, rng)
     sizes = sizes_per_obj[keys]
     # Re-map keys into a compact but non-contiguous id space (realistic ids).
-    keys = keys * np.int64(2654435761) % np.int64(1 << 40)
+    keys = keys * _ID_MULT % _ID_SPACE
     return AccessTrace(spec.name, keys.astype(np.int64), sizes.astype(np.int64))
 
 

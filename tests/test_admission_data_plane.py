@@ -4,8 +4,8 @@ Covers, layer by layer:
 
 * ``EvictionPolicy.peek_victims`` ≡ gathering ``iter_victims`` until the
   victim sizes cover ``needed`` — for every eviction policy, including the
-  RNG-sampling ones (compared under identical RNG state), both as seeded
-  sweeps and hypothesis properties;
+  sampling ones (whose counter-based RNG makes peeking a replay), both as
+  seeded sweeps and hypothesis properties;
 * batched vs scalar admission planes produce **byte-identical** hit/miss
   decision streams, ``CacheStats`` and final cache contents, trace-wide,
   across every ``TRACE_SPECS`` class and every admission x eviction combo;
@@ -57,13 +57,9 @@ def _gather_iter(e, needed):
 
 
 def _check_peek_equivalence(e, needed):
-    """peek_victims must equal the iter_victims gather under the same RNG
-    state, and must not mutate the policy."""
-    rng = getattr(e, "rng", None)
-    state = rng.getstate() if rng is not None else None
+    """peek_victims must equal the iter_victims gather, must not mutate the
+    policy, and must replay (counter-based RNG: peeking consumes nothing)."""
     ref_keys, ref_sizes = _gather_iter(e, needed)
-    if state is not None:
-        rng.setstate(state)
     before = (len(e), e.used)
     keys, sizes = e.peek_victims(needed)
     assert isinstance(keys, np.ndarray) and isinstance(sizes, np.ndarray)
@@ -71,8 +67,8 @@ def _check_peek_equivalence(e, needed):
     assert keys.tolist() == ref_keys
     assert sizes.tolist() == ref_sizes
     assert (len(e), e.used) == before, "peek_victims mutated the policy"
-    if state is not None:
-        rng.setstate(state)
+    keys2, _ = e.peek_victims(needed)
+    assert keys2.tolist() == ref_keys, "peeking twice must replay identically"
 
 
 def _filled_eviction(name, entries, *, hot_accesses=()):
@@ -143,10 +139,22 @@ class TestPeekVictims:
                 assert len(keys) == 0 and len(sizes) == 0
 
     def test_peek_stability_flags(self):
-        assert _filled_eviction("lru", [(1, 1)]).peek_stable
-        assert _filled_eviction("slru", [(1, 1)]).peek_stable
-        for name in EVICTIONS[2:]:
-            assert not _filled_eviction(name, [(1, 1)]).peek_stable
+        """Counter-based RNG makes EVERY built-in eviction peek-stable
+        (the sampled policies' draws are pure functions of the decision
+        counter), so the batched admission plane never falls back."""
+        for name in EVICTIONS:
+            assert _filled_eviction(name, [(1, 1)]).peek_stable, name
+
+    def test_decision_counter_advances_stream(self):
+        """begin_decision() — and only it — moves the sampled victim
+        stream; walks replay until the caller commits a new decision."""
+        e = _filled_eviction("sampled_frequency", [(k, 10) for k in range(30)])
+        first = list(e.iter_victims(0))[:5]
+        assert list(e.iter_victims(0))[:5] == first  # replays
+        e.begin_decision()
+        shifted = list(e.iter_victims(0))[:5]
+        assert shifted != first  # fresh stream (30 keys: collision ~ never)
+        assert list(e.iter_victims(0))[:5] == shifted
 
 
 def _run_both_planes(spec, tr, cap, **kw):
@@ -259,6 +267,39 @@ class TestOneBatchedCallPerDecision:
         assert counts["decisions"] > 50, "trace too small to be meaningful"
         assert counts["batch"] == counts["decisions"]
         assert counts["scalar"] == 0
+
+
+class TestBatchedNeverFallsBack:
+    """ISSUE 3 acceptance: data_plane="batched" actually RUNS the batched
+    plane (no admit_scalar fallback) for the four sampled evictions and
+    Random, across all admission policies."""
+
+    @pytest.mark.parametrize("admission", ("iv", "qv", "av"))
+    @pytest.mark.parametrize("eviction", EVICTIONS[2:])
+    def test_no_admit_scalar_under_batched_plane(self, admission, eviction):
+        tr = make_trace("msr2", seed=5, scale=0.0015)
+        cap = max(1, int(tr.total_object_bytes * 0.02))
+        p = SizeAwareWTinyLFU(
+            cap, admission=admission, eviction=eviction, data_plane="batched",
+            expected_entries=max(64, int(cap / tr.mean_object_size)),
+        )
+        counts = {"batched": 0, "scalar": 0}
+        orig_admit = p.admission_policy.admit
+        orig_scalar = p.admission_policy.admit_scalar
+
+        def spy_admit(*args):
+            counts["batched"] += 1
+            return orig_admit(*args)
+
+        def spy_scalar(*args):
+            counts["scalar"] += 1
+            return orig_scalar(*args)
+
+        p._admit = spy_admit
+        p.admission_policy.admit_scalar = spy_scalar
+        SimulationEngine().run(p, tr)
+        assert counts["batched"] > 20, "trace too small to be meaningful"
+        assert counts["scalar"] == 0, f"{admission}/{eviction} fell back"
 
 
 class TestFusedSketchPath:

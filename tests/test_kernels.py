@@ -90,6 +90,36 @@ class TestCMSKernel:
         assert est[0] >= 5 and est[1] == 0
 
 
+class TestCounterDraws:
+    """The device-side counter RNG (uint32 limb splitmix64) must reproduce
+    the host victim-sampling stream of repro.core.crng bit-for-bit."""
+
+    @pytest.mark.parametrize("seed,decision,start,count", [
+        (0, 0, 0, 1),
+        (0x5EED, 1, 0, 64),
+        (0xA11CE, 12345, 7, 33),
+        (2**63 + 11, 2**31, 1000, 128),
+    ])
+    def test_matches_host_stream(self, seed, decision, start, count):
+        from repro.core import crng
+
+        host = crng.draws(seed, decision, start, count)
+        dev = np.asarray(cms_ops.counter_draws(seed, decision, start, count))
+        np.testing.assert_array_equal(dev[0], (host >> np.uint64(32)).astype(np.uint32))
+        np.testing.assert_array_equal(
+            dev[1], (host & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**64 - 1), st.integers(0, 2**32), st.integers(0, 500))
+    def test_matches_host_stream_property(self, seed, decision, start):
+        from repro.core import crng
+
+        host = crng.draws(seed, decision, start, 16)
+        dev = np.asarray(cms_ops.counter_draws(seed, decision, start, 16))
+        combined = dev[0].astype(np.uint64) << np.uint64(32) | dev[1].astype(np.uint64)
+        np.testing.assert_array_equal(combined, host)
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------

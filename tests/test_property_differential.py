@@ -1,0 +1,219 @@
+"""Property-based differential suite: batched vs scalar admission planes.
+
+ISSUE 3 acceptance: with counter-based victim sampling every eviction
+policy is peek-stable, so ``data_plane="batched"`` must be **byte-identical**
+to ``"scalar"`` — same hit/miss decision stream, same ``CacheStats``
+counters, same final cache contents — for every admission x eviction combo,
+sampled evictions included.
+
+Three layers:
+
+* a **seeded exhaustive grid** over all 21 combos that runs without
+  hypothesis (tier-1), re-seedable via ``REPRO_DIFF_SEED`` (the nightly CI
+  seed-matrix job reruns it under several fixed seeds);
+* **hypothesis properties** generating random traces (key skew, size
+  distributions, capacities) and random ``PolicySpec`` strings (window
+  fraction, pruning, ``?seed=``), asserting plane equivalence and spec
+  round-tripping — skipped cleanly when hypothesis is absent
+  (``_hypothesis_compat``);
+* a ``slow``-marked CMS-backend differential sweep (Pallas interpret mode
+  is correct but not fast on CPU), for the nightly run.
+"""
+
+import os
+import zlib
+
+import numpy as np
+import pytest
+from _hypothesis_compat import HealthCheck, given, settings, st
+
+from repro.core import REGISTRY, PolicySpec
+
+#: Base seed for the exhaustive grid; the nightly seed-matrix job sets it.
+DIFF_SEED = int(os.environ.get("REPRO_DIFF_SEED", "0"))
+
+ADMISSIONS = ("iv", "qv", "av")
+EVICTIONS = (
+    "lru",
+    "slru",
+    "sampled_frequency",
+    "sampled_size",
+    "sampled_frequency_size",
+    "sampled_needed_size",
+    "random",
+)
+ALL_COMBOS = [(a, e) for a in ADMISSIONS for e in EVICTIONS]
+
+
+def _combo_key(admission: str, eviction: str) -> int:
+    # crc32, not hash(): str hashing is randomized per process, which would
+    # silently vary the generated traces between runs.
+    return zlib.crc32(f"{admission}/{eviction}".encode()) & 0x7FFFFFFF
+
+
+def _synth_trace(rng: np.random.Generator, n: int, key_space: int, size_mode: str):
+    """Key-skewed trace with per-key-stable sizes in the chosen regime."""
+    keys = (rng.zipf(1.25, size=n) - 1) % key_space
+    if size_mode == "uniform":
+        per_key = rng.integers(8, 120, size=key_space)
+    elif size_mode == "clustered":
+        per_key = rng.choice([16, 64, 256], size=key_space, p=[0.5, 0.35, 0.15])
+    else:  # heavytail
+        per_key = np.minimum(8 + (rng.pareto(1.1, size=key_space) * 40).astype(np.int64), 4000)
+    sizes = per_key[keys]
+    return keys.astype(np.int64).tolist(), sizes.astype(np.int64).tolist()
+
+
+def _run_plane(spec, capacity, keys, sizes, plane, **kw):
+    p = REGISTRY.build(spec, capacity, data_plane=plane, **kw)
+    hits = []
+    for k, s in zip(keys, sizes):
+        hits.append(p.access(k, s))
+        assert p.used_bytes() <= p.capacity, "capacity invariant violated"
+    return p, hits
+
+
+def _assert_identical(a, b, hits_a, hits_b, label):
+    assert hits_a == hits_b, f"{label}: hit/miss streams diverge"
+    sa, sb = a.stats, b.stats
+    for field in ("accesses", "hits", "bytes_requested", "bytes_hit",
+                  "victims_examined", "admissions", "rejections", "evictions"):
+        assert getattr(sa, field) == getattr(sb, field), f"{label}: stats.{field}"
+    assert list(a.window.items()) == list(b.window.items()), f"{label}: window"
+    assert a.main.sizes == b.main.sizes, f"{label}: main contents"
+    assert a.used_bytes() == b.used_bytes(), f"{label}: used bytes"
+
+
+class TestSeededGrid:
+    """Exhaustive combo grid, hypothesis-free (always runs in tier-1)."""
+
+    @pytest.mark.parametrize("admission,eviction", ALL_COMBOS)
+    def test_planes_byte_identical(self, admission, eviction):
+        rng = np.random.default_rng([DIFF_SEED, _combo_key(admission, eviction)])
+        for trial, size_mode in enumerate(("uniform", "clustered", "heavytail")):
+            keys, sizes = _synth_trace(rng, n=500, key_space=40, size_mode=size_mode)
+            cap = max(120, int(np.mean(sizes) * 8))
+            spec = f"wtlfu-{admission}-{eviction}?window_frac=0.1&seed={DIFF_SEED + trial}"
+            out = [
+                _run_plane(spec, cap, keys, sizes, plane, expected_entries=64)
+                for plane in ("scalar", "batched")
+            ]
+            (a, ha), (b, hb) = out
+            _assert_identical(a, b, ha, hb, f"{spec} [{size_mode}]")
+            assert a.stats.evictions > 0, f"{spec} [{size_mode}]: trace never evicted"
+
+    def test_spec_seed_round_trip(self):
+        """?seed= plumbs through PolicySpec (decimal and hex) and reaches
+        the sampled eviction policy."""
+        s = PolicySpec.parse("wtlfu-av-random?seed=0x5EED")
+        assert s.params_dict["seed"] == 0x5EED
+        assert PolicySpec.parse(s.to_string()) == s
+        assert PolicySpec.parse("wtlfu-av-random?seed=24301") == s
+        p = REGISTRY.build("wtlfu-qv-sampled_frequency?seed=0xA11CE", 1000,
+                           expected_entries=32)
+        assert p.main.seed == 0xA11CE
+
+    def test_different_seeds_diverge(self):
+        """The ?seed= knob is live: distinct seeds sample distinct victims
+        (same trace, same policy, different eviction streams)."""
+        rng = np.random.default_rng(DIFF_SEED + 99)
+        keys, sizes = _synth_trace(rng, n=800, key_space=30, size_mode="uniform")
+        cap = max(120, int(np.mean(sizes) * 6))
+        outs = []
+        for seed in (1, 2):
+            p, hits = _run_plane(f"wtlfu-av-random?seed={seed}", cap, keys, sizes,
+                                 "batched", expected_entries=64)
+            outs.append((hits, sorted(p.main.sizes)))
+        assert outs[0] != outs[1]
+
+
+class TestHypothesisDifferential:
+    @settings(max_examples=30, deadline=None,
+              suppress_health_check=(HealthCheck.too_slow,))
+    @given(
+        admission=st.sampled_from(ADMISSIONS),
+        eviction=st.sampled_from(EVICTIONS),
+        key_space=st.integers(6, 120),
+        n=st.integers(60, 400),
+        size_mode=st.sampled_from(("uniform", "clustered", "heavytail")),
+        cap_scale=st.floats(2.0, 20.0),
+        window_frac=st.floats(0.02, 0.4),
+        early_pruning=st.booleans(),
+        seed=st.integers(0, 2**32 - 1),
+        trace_seed=st.integers(0, 2**31 - 1),
+    )
+    def test_random_trace_random_spec(self, admission, eviction, key_space,
+                                      n, size_mode, cap_scale, window_frac,
+                                      early_pruning, seed, trace_seed):
+        """Random trace x random spec string: planes byte-identical, spec
+        round-trips."""
+        rng = np.random.default_rng(trace_seed)
+        keys, sizes = _synth_trace(rng, n=n, key_space=key_space, size_mode=size_mode)
+        cap = max(100, int(np.mean(sizes) * cap_scale))
+        params = f"window_frac={round(window_frac, 3)}&seed={seed}"
+        if admission == "av":
+            params += f"&early_pruning={int(early_pruning)}"
+        spec_text = f"wtlfu-{admission}-{eviction}?{params}"
+        spec = PolicySpec.parse(spec_text)
+        assert PolicySpec.parse(spec.to_string()) == spec
+        out = [
+            _run_plane(spec, cap, keys, sizes, plane, expected_entries=64)
+            for plane in ("scalar", "batched")
+        ]
+        (a, ha), (b, hb) = out
+        _assert_identical(a, b, ha, hb, spec_text)
+
+    @settings(max_examples=15, deadline=None,
+              suppress_health_check=(HealthCheck.too_slow,))
+    @given(
+        entries=st.lists(
+            st.tuples(st.integers(0, 5000), st.integers(1, 300)),
+            min_size=1, max_size=50, unique_by=lambda kv: kv[0],
+        ),
+        eviction=st.sampled_from(EVICTIONS[2:]),
+        needed_frac=st.floats(0.0, 1.3),
+        decisions=st.integers(0, 5),
+    )
+    def test_sampled_peek_replays(self, entries, eviction, needed_frac, decisions):
+        """Sampled policies: peek_victims is a pure replay at any decision
+        index — peeking twice, or peeking then walking, must agree."""
+        from repro.core.eviction import make_eviction
+
+        e = make_eviction(eviction, capacity=10**9, freq_fn=lambda k: (k * 13) % 7)
+        for k, s in entries:
+            e.insert(k, s)
+        for _ in range(decisions):
+            e.begin_decision()
+        needed = int(sum(s for _, s in entries) * needed_frac)
+        k1, s1 = e.peek_victims(needed)
+        k2, s2 = e.peek_victims(needed)
+        assert k1.tolist() == k2.tolist() and s1.tolist() == s2.tolist()
+        walked, total = [], 0
+        if needed > 0:
+            for v in e.iter_victims(needed):
+                walked.append(v)
+                total += e.sizes[v]
+                if total >= needed:
+                    break
+        assert k1.tolist() == walked
+
+
+@pytest.mark.slow
+class TestCMSBackendDifferential:
+    """Planes also agree under the CMS Pallas sketch backend (nightly —
+    interpret mode makes this slow on CPU)."""
+
+    @pytest.mark.parametrize("admission", ADMISSIONS)
+    @pytest.mark.parametrize("eviction", ("sampled_frequency", "sampled_needed_size", "random"))
+    def test_cms_planes_byte_identical(self, admission, eviction):
+        rng = np.random.default_rng([DIFF_SEED, 0xC35, _combo_key(admission, eviction)])
+        keys, sizes = _synth_trace(rng, n=250, key_space=30, size_mode="uniform")
+        cap = max(120, int(np.mean(sizes) * 8))
+        spec = f"wtlfu-{admission}-{eviction}?seed={DIFF_SEED}"
+        out = [
+            _run_plane(spec, cap, keys, sizes, plane,
+                       expected_entries=64, sketch_backend="cms")
+            for plane in ("scalar", "batched")
+        ]
+        (a, ha), (b, hb) = out
+        _assert_identical(a, b, ha, hb, f"cms:{spec}")

@@ -12,7 +12,14 @@ from repro.core.eviction import (
     SLRUEviction,
     make_eviction,
 )
-from repro.traces import TRACE_SPECS, load_trace, make_trace, save_trace
+from repro.traces import (
+    SHIFT_SPECS,
+    TRACE_SPECS,
+    load_trace,
+    make_trace,
+    save_trace,
+    shift_boundaries,
+)
 
 
 class TestTraces:
@@ -120,6 +127,63 @@ class TestTraces:
             load_trace(p)
 
 
+class TestWorkloadShift:
+    """The workload-shift traces (ISSUE 3 satellite): phase boundaries must
+    genuinely move the hot set and the size regime, while object sizes stay
+    stable trace-wide."""
+
+    @staticmethod
+    def _hot_set(keys: np.ndarray, top: int = 50) -> set:
+        uniq, counts = np.unique(keys, return_counts=True)
+        return set(uniq[np.argsort(-counts)][:top].tolist())
+
+    @pytest.mark.parametrize("name", sorted(SHIFT_SPECS))
+    def test_phase_boundary_shifts_hot_set(self, name):
+        scale = 0.02
+        tr = make_trace(name, seed=3, scale=scale)
+        bounds = shift_boundaries(name, scale=scale)
+        assert len(tr) == sum(
+            max(1000, int(p.n_accesses * scale)) for p in SHIFT_SPECS[name].phases
+        )
+        segs = np.split(tr.keys, bounds)
+        for a, b in zip(segs, segs[1:]):
+            hot_a, hot_b = self._hot_set(a), self._hot_set(b)
+            jaccard = len(hot_a & hot_b) / len(hot_a | hot_b)
+            assert jaccard < 0.5, f"{name}: hot set barely moved ({jaccard:.2f})"
+
+    def test_phase_boundary_shifts_size_regime(self):
+        scale = 0.02
+        tr = make_trace("shift1", seed=1, scale=scale)
+        (bound,) = shift_boundaries("shift1", scale=scale)
+        mean_pre = tr.sizes[:bound].mean()
+        mean_post = tr.sizes[bound:].mean()
+        ratio = max(mean_pre, mean_post) / min(mean_pre, mean_post)
+        assert ratio > 2.0, f"size regime barely moved (x{ratio:.2f})"
+
+    def test_sizes_stable_across_phases(self):
+        tr = make_trace("shift2", seed=0, scale=0.015)
+        seen: dict[int, int] = {}
+        for k, s in zip(tr.keys.tolist(), tr.sizes.tolist()):
+            assert seen.setdefault(k, s) == s
+
+    def test_deterministic_and_seed_sensitive(self):
+        a = make_trace("shift1", seed=5, scale=0.015)
+        b = make_trace("shift1", seed=5, scale=0.015)
+        np.testing.assert_array_equal(a.keys, b.keys)
+        np.testing.assert_array_equal(a.sizes, b.sizes)
+        c = make_trace("shift1", seed=6, scale=0.015)
+        assert not np.array_equal(a.keys, c.keys)
+
+    def test_phases_carry_over_objects(self):
+        """overlap_frac > 0: some previous-phase objects survive the shift."""
+        scale = 0.02
+        tr = make_trace("shift2", seed=2, scale=scale)
+        bounds = shift_boundaries("shift2", scale=scale)
+        segs = np.split(tr.keys, bounds)
+        for a, b in zip(segs, segs[1:]):
+            assert len(set(a.tolist()) & set(b.tolist())) > 0
+
+
 class TestSLRU:
     def test_probation_then_protected(self):
         e = SLRUEviction(1000)
@@ -177,6 +241,49 @@ class TestSampled:
             e.insert(k, 10)
         seen = list(e.iter_victims())
         assert sorted(seen) == list(range(10))
+
+    @pytest.mark.parametrize("make", [
+        lambda: SampledEviction("frequency", freq_fn=lambda k: k % 3, seed=11),
+        lambda: RandomEviction(seed=11),
+    ])
+    def test_taken_rejection_fallback_deterministic(self, make):
+        """Regression (ISSUE 3 satellite): when every draw of a step lands
+        on already-taken keys, the walk falls back to a linear scan of the
+        fixed key view. Under the counter-based RNG that path must fire,
+        yield every key exactly once, and replay byte-identically."""
+        e = make()
+        n = 4 if e.SAMPLE > 1 else 3
+        for k in range(n):
+            e.insert(k, 10)
+        hit_order = None
+        for _ in range(400):
+            e.begin_decision()
+            before = e.fallback_scans
+            order = list(e.iter_victims(0))
+            assert sorted(order) == list(range(n))  # full drain, no dupes
+            if e.fallback_scans > before:
+                hit_order = order
+                break
+        assert hit_order is not None, "no decision exercised the fallback"
+        # replay the SAME decision: identical draws, identical fallback scan
+        assert list(e.iter_victims(0)) == hit_order
+        # and the array peek view agrees with the walk
+        keys, sizes = e.peek_victims(10 * n)
+        assert keys.tolist() == hit_order
+        assert sizes.tolist() == [10] * n
+
+    def test_fallback_scan_order_is_slot_order(self):
+        """The fallback's linear scan follows the swap-remove key list, so
+        it is a pure function of insert/evict history — pin that contract."""
+        e = RandomEviction(seed=0)
+        for k in (10, 11, 12, 13):
+            e.insert(k, 5)
+        e.evict(11)  # swap-remove: 13 moves into slot 1 -> [10, 13, 12]
+        assert e.keys == [10, 13, 12]
+        e.begin_decision()
+        walk = list(e.iter_victims(0))
+        assert sorted(walk) == [10, 12, 13]
+        assert list(e.iter_victims(0)) == walk  # replayable regardless
 
 
 @settings(max_examples=25, deadline=None)

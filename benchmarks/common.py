@@ -34,13 +34,16 @@ def get_trace(name: str, seed: int = 0):
 
 
 def run_policy(name: "str | PolicySpec", trace, cap: int, *, engine: SimulationEngine | None = None,
-               with_snapshots: bool = False, **kw) -> dict:
+               with_snapshots: bool = False, limit: "int | None" = None, **kw) -> dict:
     """Drive one policy spec over one trace; returns a result row.
 
     ``name`` is any registry spec (``"wtlfu-av?early_pruning=0"``); ``kw``
     carries build-time objects (``trace=`` for belady is added here).
     ``with_snapshots`` adds the engine's ``StatsSnapshot`` rows (the engine
-    must be constructed with ``snapshot_every=``) as a ``"snapshots"`` list.
+    must be constructed with ``snapshot_every=``) as a ``"snapshots"`` list;
+    ``limit`` caps driven accesses (the device-plane comparison rows trim
+    the trace — per-decision kernel dispatch is the thing being measured,
+    not trace length).
     """
     spec = PolicySpec.parse(name)
     if (
@@ -53,7 +56,7 @@ def run_policy(name: "str | PolicySpec", trace, cap: int, *, engine: SimulationE
         kw["trace"] = trace
     policy = REGISTRY.build(spec, cap, **kw)
     t0 = time.perf_counter()
-    result = (engine or SimulationEngine()).run(policy, trace)
+    result = (engine or SimulationEngine()).run(policy, trace, limit=limit)
     st = result.stats
     wall = time.perf_counter() - t0
     row = {
@@ -68,6 +71,7 @@ def run_policy(name: "str | PolicySpec", trace, cap: int, *, engine: SimulationE
         "us_per_access": round(wall / max(1, st.accesses) * 1e6, 3),
         "wall_s": round(wall, 3),
         "used_batch": result.used_batch,
+        "data_plane": result.data_plane,
     }
     if with_snapshots:
         row["snapshots"] = [

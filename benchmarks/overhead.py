@@ -22,11 +22,20 @@ in ``BENCH_overhead.json``:
   one batched ``estimate_batch`` call vs N scalar ``estimate`` calls. This
   is the data plane the batching is built for (one kernel dispatch instead
   of N); ``batched_speedup`` here is the headline batching win.
+* **Device plane** — ``data_plane=device`` (the whole decision as ONE
+  jitted sample->score->select call, ``repro.kernels.admission``) vs the
+  scalar walk on the SAME CMS backend. Off-TPU these rows measure kernel
+  semantics plus XLA-CPU dispatch, not accelerator speed — the point is
+  the per-PR trajectory (``BENCH_overhead.json`` at the repo root, written
+  by ``benchmarks/run.py``), and a hard hit-ratio equality check fails the
+  run if the planes ever stop deciding identically.
 """
 
 from __future__ import annotations
 
 import time
+
+from repro.core import PolicySpec
 
 from .common import PAPER_TRACES, emit, get_trace, run_policy
 
@@ -48,6 +57,18 @@ DATA_PLANE_POLICIES = (
 )
 #: Victim-set sizes for the sketch-level data-plane comparison.
 SKETCH_BATCH_SIZES = (8, 32, 128)
+#: Specs run under the device-resident plane vs the scalar walk (both on
+#: the CMS backend): one per admission discipline, covering the mirror-walk
+#: kernel (sampled/random mains) and the covering-prefix kernel (SLRU).
+DEVICE_PLANE_POLICIES = (
+    "wtlfu-av-slru",
+    "wtlfu-qv-sampled_frequency",
+    "wtlfu-iv-random",
+)
+#: Accesses driven per device-plane row: enough decisions to amortize jit
+#: compilation into the noise floor while keeping the off-TPU (XLA-CPU)
+#: comparison affordable.
+DEVICE_PLANE_LIMIT = 6_000
 
 
 def sketch_data_plane_rows(batch_sizes=SKETCH_BATCH_SIZES, repeats: int = 30) -> list[dict]:
@@ -77,6 +98,41 @@ def sketch_data_plane_rows(batch_sizes=SKETCH_BATCH_SIZES, repeats: int = 30) ->
             "batched_speedup": round(scalar_us / max(1e-9, batched_us), 2),
             "data_plane": "batched_vs_scalar",
         })
+    return rows
+
+
+def device_plane_rows(traces=("msr2",), frac=0.01, limit=DEVICE_PLANE_LIMIT) -> list[dict]:
+    """Device-resident vs scalar admission plane on the CMS sketch backend.
+
+    Each pair's hit ratios must agree (checked with a hard ``raise``, so a
+    plane divergence fails the bench run — at ``limit`` accesses the
+    5-decimal rounding cannot mask even a single differing decision);
+    ``device_speedup`` = scalar us/access over device us/access.
+    """
+    rows = []
+    for tname in traces:
+        tr = get_trace(tname)
+        cap = max(1, int(tr.total_object_bytes * frac))
+        for pol in DEVICE_PLANE_POLICIES:
+            spec = PolicySpec.parse(pol)
+            pair = {}
+            for plane in ("device", "scalar"):
+                rp = run_policy(spec.with_params(data_plane=plane, sketch_backend="cms"),
+                                tr, cap, limit=limit)
+                rp["frac"] = frac
+                pair[plane] = rp
+                rows.append(rp)
+            if pair["device"]["hit_ratio"] != pair["scalar"]["hit_ratio"]:
+                raise AssertionError(
+                    f"{pol}: device plane diverged from scalar "
+                    f"({pair['device']['hit_ratio']} vs {pair['scalar']['hit_ratio']})"
+                )
+            pair["device"]["hit_ratio_matches_scalar"] = True
+            pair["device"]["device_speedup"] = round(
+                pair["scalar"]["us_per_access"]
+                / max(1e-9, pair["device"]["us_per_access"]),
+                3,
+            )
     return rows
 
 
@@ -113,6 +169,7 @@ def main(traces=PAPER_TRACES, fracs=FRACS) -> list[dict]:
                     / max(1e-9, pair["batched"]["us_per_access"]),
                     3,
                 )
+    rows.extend(device_plane_rows())
     rows.extend(sketch_data_plane_rows())
     emit("overhead", rows, derived_key="overhead_us")
     return rows

@@ -4,12 +4,40 @@
 
 Emits ``name,us_per_call,derived`` CSV rows and writes JSON to
 ``benchmarks/results/``. Scale with REPRO_BENCH_SCALE (default 0.08).
+
+Running the ``overhead`` bench additionally writes ``BENCH_overhead.json``
+at the repo root: one compact ``(policy, data_plane, trace,
+accesses_per_sec)`` row per measured policy run, so the throughput
+trajectory across PRs is machine-readable without parsing the full
+``benchmarks/results/overhead.json`` (nightly CI uploads it as an
+artifact).
 """
 
 from __future__ import annotations
 
+import json
+import pathlib
 import sys
 import time
+
+BENCH_OVERHEAD_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_overhead.json"
+
+
+def write_bench_overhead(rows: "list[dict]") -> None:
+    """Condense overhead rows into the repo-root perf-trajectory file."""
+    out = [
+        {
+            "policy": r["policy"],
+            "data_plane": r.get("data_plane"),
+            "trace": r.get("trace"),
+            "capacity": r.get("capacity"),
+            "accesses_per_sec": round(1e6 / max(r["us_per_access"], 1e-9), 1),
+        }
+        for r in rows
+        if r.get("policy") and r.get("us_per_access")
+    ]
+    with open(BENCH_OVERHEAD_PATH, "w") as f:
+        json.dump(out, f, indent=1)
 
 
 def main() -> None:
@@ -40,7 +68,10 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name in selected:
         t0 = time.perf_counter()
-        benches[name]()
+        rows = benches[name]()
+        if name == "overhead" and rows:
+            write_bench_overhead(rows)
+            print(f"# wrote {BENCH_OVERHEAD_PATH}", flush=True)
         print(f"# {name} done in {time.perf_counter() - t0:.1f}s", flush=True)
 
 

@@ -15,11 +15,13 @@ whose
   CMS backend, the pending-increment flush and the scoring fuse into one
   Pallas kernel launch).
 
-Both planes are implemented for every discipline — ``admit`` (batched) and
+Three planes are implemented for every discipline — ``admit`` (batched),
 ``admit_scalar`` (the reference per-victim walk; also what
 ``SizeAwareWTinyLFU(data_plane="auto")`` resolves to on the host sketch,
-where direct calls beat batching abstraction at typical victim counts) —
-and are
+where direct calls beat batching abstraction at typical victim counts) and
+``admit_device`` (the closed-loop device plane: victim draws, gather, fused
+CMS flush+estimate, verdict replay and victim selection all in ONE jitted
+call — see :mod:`repro.kernels.admission`) — and are
 **byte-identical**: same admissions, same evictions in the same order, same
 ``CacheStats`` counters, asserted trace-wide in
 ``tests/test_admission_data_plane.py``. The equivalence arguments, per
@@ -171,6 +173,28 @@ class AdmissionPolicy:
                      main: "EvictionPolicy", stats: "CacheStats") -> bool:
         """Scalar reference control loop (per-victim ``estimate`` calls)."""
         raise NotImplementedError
+
+    # -- device data plane -------------------------------------------------
+    def bind_device_plane(self, main: "EvictionPolicy"):
+        """Build this discipline's device-resident decision engine over
+        ``main`` (the ``data_plane="device"`` plumbing; requires the CMS
+        sketch backend and a peek-stable main — see
+        :mod:`repro.kernels.admission`). Returns the bound plane."""
+        from repro.kernels.admission import DeviceAdmissionPlane
+
+        self._device = DeviceAdmissionPlane(
+            self.sketch, main, discipline=self.name,
+            early_pruning=getattr(self, "early_pruning", True))
+        return self._device
+
+    def admit_device(self, key: int, size: int, needed: int,
+                     main: "EvictionPolicy", stats: "CacheStats") -> bool:
+        """Device data plane: the whole sample->score->select decision runs
+        as ONE jitted device call (victim draws, key/size gather, fused CMS
+        flush+estimate, verdict replay, victim selection); only the verdict
+        returns to the host. Byte-identical to both host planes, asserted
+        across the full admission x eviction grid in tests."""
+        return self._device.decide(key, size, needed, main, stats)
 
 
 class IVAdmission(AdmissionPolicy):

@@ -142,6 +142,10 @@ class SimulationResult:
     warmup_stats: CacheStats | None = None
     wall_seconds: float = 0.0
     used_batch: bool = False
+    #: The policy's resolved admission data plane ("scalar" / "batched" /
+    #: "device"), or None for policies without one — benchmark rows key
+    #: their per-plane throughput comparisons on this.
+    data_plane: str | None = None
 
 
 def _iter_chunks(
@@ -317,4 +321,5 @@ class SimulationEngine:
             warmup_stats=warmup_stats,
             wall_seconds=wall,
             used_batch=batched,
+            data_plane=getattr(policy, "data_plane", None),
         )

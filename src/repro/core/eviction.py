@@ -57,6 +57,15 @@ class EvictionPolicy:
     #: victims follow. Enables the single-batch admission data plane.
     peek_stable: bool = False
 
+    #: True when the policy addresses its entries by dense slot (the
+    #: swap-remove key list) and reports every slot write through an
+    #: attached mirror — the device admission plane then keeps a
+    #: device-resident ``(keys, sizes)`` twin and selects victims entirely
+    #: on device (see :mod:`repro.kernels.admission`). Policies without
+    #: slot addressing (LRU/SLRU walk order dicts) leave this False and the
+    #: device plane hands their covering prefix to the kernel instead.
+    mirror_slots: bool = False
+
     def __init__(self):
         self.sizes: dict[int, int] = {}
         self.used = 0
@@ -275,6 +284,7 @@ class SampledEviction(EvictionPolicy):
 
     SAMPLE = 5
     peek_stable = True
+    mirror_slots = True
     RULES = ("frequency", "size", "frequency_size", "needed_size", "random")
     #: Rules whose scoring reads the frequency sketch.
     _FREQ_RULES = frozenset(("frequency", "frequency_size"))
@@ -301,12 +311,26 @@ class SampledEviction(EvictionPolicy):
         #: fell back to the deterministic linear scan — regression-test
         #: observability for the rejection/fallback path.
         self.fallback_scans = 0
+        #: Attached slot-table observer (the device admission plane's
+        #: key/size mirror); every slot write below reports through it.
+        self._mirror = None
+
+    def attach_mirror(self, mirror) -> None:
+        """Register a slot-write observer and replay the current table into
+        it. The mirror sees ``record(slot, key, size)`` for the insert
+        append and the swap-remove back-fill — exactly the writes that keep
+        a dense ``slot -> (key, size)`` twin in sync with ``self.keys``."""
+        self._mirror = mirror
+        for i, k in enumerate(self.keys):
+            mirror.record(i, k, self.sizes[k])
 
     def insert(self, key: int, size: int) -> None:
         self.sizes[key] = size
         self.used += size
         self.pos[key] = len(self.keys)
         self.keys.append(key)
+        if self._mirror is not None:
+            self._mirror.record(len(self.keys) - 1, key, size)
 
     def evict(self, key: int) -> None:
         self.used -= self.sizes.pop(key)
@@ -315,6 +339,8 @@ class SampledEviction(EvictionPolicy):
         if last != key:
             self.keys[i] = last
             self.pos[last] = i
+            if self._mirror is not None:
+                self._mirror.record(i, last, self.sizes[last])
 
     def on_access(self, key: int) -> None:  # sampling policies keep no order
         pass

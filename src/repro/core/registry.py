@@ -163,6 +163,14 @@ class PolicySpec:
                 params[key] = parse_scalar(urllib.parse.unquote(raw))
         return cls.make(name, **params)
 
+    def with_params(self, **overrides: Any) -> "PolicySpec":
+        """A copy with ``overrides`` merged over the existing params — how
+        the benchmark sweeps derive per-data-plane variants of one spec
+        (``spec.with_params(data_plane="device")``)."""
+        merged = self.params_dict
+        merged.update(overrides)
+        return PolicySpec.make(self.name, **merged)
+
     def to_string(self) -> str:
         """Render a spec string such that ``parse(to_string()) == self``."""
         if not self.params:

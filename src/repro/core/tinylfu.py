@@ -52,8 +52,8 @@ EVICTIONS = (
     "random",
 )
 
-SKETCH_BACKENDS = ("host", "cms")
-DATA_PLANES = ("auto", "batched", "scalar")
+SKETCH_BACKENDS = ("auto", "host", "cms")
+DATA_PLANES = ("auto", "batched", "scalar", "device")
 
 
 def _wtlfu_alias(name: str) -> dict | None:
@@ -101,16 +101,22 @@ class SizeAwareWTinyLFU:
     sketch_backend: ``"host"`` (pure-Python sketch) or ``"cms"`` (batched
         Pallas count-min-sketch kernels; increments are buffered and
         flushed lazily before estimates, which is exactly equivalent to
-        scalar driving — see :mod:`repro.core.cms_sketch`).
+        scalar driving — see :mod:`repro.core.cms_sketch`). The default
+        ``"auto"`` resolves to ``"host"`` except under
+        ``data_plane="device"``, which requires (and implies) ``"cms"``.
     data_plane: ``"batched"`` scores each admission decision with one
         ``estimate_batch`` call over the lazily-gathered victim prefix;
-        ``"scalar"`` pins the reference per-victim walk. The default
-        ``"auto"`` picks per sketch backend (``sketch.batched_native``):
-        batched for the CMS kernels — one fused launch per decision beats
-        per-victim kernel calls — and the scalar walk for the host sketch,
-        where CPython method dispatch makes direct calls the lightweight
-        option at typical victim counts. Decisions are byte-identical
-        either way (asserted trace-wide in tests).
+        ``"scalar"`` pins the reference per-victim walk; ``"device"`` runs
+        the WHOLE decision — victim draws, key/size gather, fused CMS
+        flush+estimate, verdict replay, victim selection — as one jitted
+        device call (CMS backend only; see
+        :mod:`repro.kernels.admission`). The default ``"auto"`` picks per
+        sketch backend (``sketch.batched_native``): batched for the CMS
+        kernels — one fused launch per decision beats per-victim kernel
+        calls — and the scalar walk for the host sketch, where CPython
+        method dispatch makes direct calls the lightweight option at
+        typical victim counts. Decisions are byte-identical on every plane
+        (asserted trace-wide in tests).
     """
 
     def __init__(
@@ -124,7 +130,7 @@ class SizeAwareWTinyLFU:
         early_pruning: bool = True,
         adaptive_window: bool = False,
         seed: int = 0x5EED,
-        sketch_backend: str = "host",
+        sketch_backend: str = "auto",
         sketch_kwargs: dict | None = None,
         data_plane: str = "auto",
     ):
@@ -134,6 +140,13 @@ class SizeAwareWTinyLFU:
             raise ValueError(f"sketch_backend must be one of {SKETCH_BACKENDS}")
         if data_plane not in DATA_PLANES:
             raise ValueError(f"data_plane must be one of {DATA_PLANES}")
+        if sketch_backend == "auto":
+            sketch_backend = "cms" if data_plane == "device" else "host"
+        if data_plane == "device" and sketch_backend != "cms":
+            raise ValueError(
+                'data_plane="device" requires sketch_backend="cms" (the '
+                "decision kernel runs over the device-resident CMS table)"
+            )
         self.capacity = int(capacity)
         self.window_cap = max(1, int(capacity * window_frac))
         self.main_cap = self.capacity - self.window_cap
@@ -182,11 +195,13 @@ class SizeAwareWTinyLFU:
         if data_plane == "auto":
             data_plane = "batched" if getattr(self.sketch, "batched_native", False) else "scalar"
         self.data_plane = data_plane  # resolved, never "auto"
-        self._admit = (
-            self.admission_policy.admit
-            if data_plane == "batched"
-            else self.admission_policy.admit_scalar
-        )
+        if data_plane == "device":
+            self.admission_policy.bind_device_plane(self.main)
+            self._admit = self.admission_policy.admit_device
+        elif data_plane == "batched":
+            self._admit = self.admission_policy.admit
+        else:
+            self._admit = self.admission_policy.admit_scalar
         self.stats = CacheStats()
 
     # -- introspection -----------------------------------------------------
@@ -268,7 +283,10 @@ class SizeAwareWTinyLFU:
         if self._adapt_prev_ratio >= 0 and ratio < self._adapt_prev_ratio:
             self._adapt_dir = -self._adapt_dir  # got worse: reverse
         new_window = self.window_cap + self._adapt_dir * self._adapt_step
-        new_window = max(self.capacity // 100, min(self.capacity // 2, new_window))
+        # Floor at 1 byte, not capacity//100 alone: below 100 bytes that
+        # floor is 0, and a couple of downward steps would silently disable
+        # the Window (violating the constructor's max(1, ...) invariant).
+        new_window = max(1, self.capacity // 100, min(self.capacity // 2, new_window))
         self.window_cap = new_window
         self.main_cap = self.capacity - new_window
         # drain whichever region now overflows

@@ -1,4 +1,6 @@
 """Pallas TPU kernels (validated in interpret mode on CPU):
 cms/ — batched TinyLFU count-min sketch (the paper's data structure);
+admission — device-resident admission decisions (the closed
+sample→score→select loop behind ``data_plane="device"``);
 attention/ — flash attention forward (+jnp VJP);
 wkv/ — RWKV6 chunked linear recurrence."""

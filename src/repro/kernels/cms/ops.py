@@ -37,8 +37,10 @@ __all__ = [
 # done in 16-bit limbs so no partial product or carry chain ever overflows
 # uint32. Constants come from repro.core.crng (the single source of truth),
 # so host and device streams cannot silently diverge. It is the sampling
-# building block for a future device-resident admission plane (ROADMAP),
-# validated against the host stream in tests/test_kernels.py.
+# building block of the device-resident admission plane
+# (repro.kernels.admission draws victim slots from this stream inside its
+# closed decision loop), validated against the host stream in
+# tests/test_kernels.py.
 
 _U16 = jnp.uint32(0xFFFF)
 
@@ -171,11 +173,20 @@ class DeviceSketch:
 
     def increment(self, keys) -> None:
         keys = jnp.atleast_1d(jnp.asarray(keys, jnp.int32))
-        self.table = update(self.table, keys, cap=self.cap)
-        self._ops += int(keys.shape[0])
-        if self._ops >= self.sample_size:
-            self.table = reset(self.table)
-            self._ops //= 2
+        total = int(keys.shape[0])
+        pos = 0
+        # Split the batch at aging-reset boundaries (like CMSSketch.flush):
+        # applying the whole batch and then resetting at most once would let
+        # a batch larger than the remaining sample window skip agings, so
+        # batched and scalar driving would diverge.
+        while pos < total:
+            take = min(total - pos, self.sample_size - self._ops)
+            self.table = update(self.table, keys[pos : pos + take], cap=self.cap)
+            self._ops += take
+            pos += take
+            if self._ops >= self.sample_size:
+                self.table = reset(self.table)
+                self._ops //= 2
 
     def estimate(self, keys):
         keys = jnp.atleast_1d(jnp.asarray(keys, jnp.int32))

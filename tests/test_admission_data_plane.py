@@ -12,7 +12,13 @@ Covers, layer by layer:
 * the batched plane issues exactly ONE ``estimate_batch`` call per
   admission decision and zero scalar ``estimate`` calls on the hot path;
 * ``CMSSketch.estimate_batch``'s fused flush+score kernel path equals the
-  staged flush-then-estimate path.
+  staged flush-then-estimate path;
+* the device plane (ISSUE 4): plane/backend resolution and spec
+  round-tripping, exactly ONE jitted decision call per admission decision
+  (no per-victim host round-trips), the incrementally-maintained device
+  key/size mirror staying in sync with the eviction policy, and three-way
+  scalar == batched == device byte-identity (the exhaustive grid lives in
+  ``tests/test_property_differential.py``).
 """
 
 import random
@@ -300,6 +306,110 @@ class TestBatchedNeverFallsBack:
         SimulationEngine().run(p, tr)
         assert counts["batched"] > 20, "trace too small to be meaningful"
         assert counts["scalar"] == 0, f"{admission}/{eviction} fell back"
+
+
+class TestDevicePlane:
+    """ISSUE 4: the closed-loop device-resident admission decision."""
+
+    def test_device_plane_implies_cms_backend(self):
+        p = SizeAwareWTinyLFU(10_000, expected_entries=64, data_plane="device")
+        assert p.data_plane == "device"
+        assert p.sketch_backend == "cms"
+        with pytest.raises(ValueError, match="cms"):
+            SizeAwareWTinyLFU(10_000, expected_entries=64,
+                              data_plane="device", sketch_backend="host")
+
+    def test_spec_round_trip(self):
+        from repro.core import PolicySpec
+
+        spec = PolicySpec.parse("wtlfu-av-random?data_plane=device&seed=0x5EED")
+        assert PolicySpec.parse(spec.to_string()) == spec
+        assert spec.with_params(data_plane="scalar").params_dict["data_plane"] == "scalar"
+        p = REGISTRY.build(spec, 5_000, expected_entries=64)
+        assert p.data_plane == "device"
+        assert p.sketch_backend == "cms"
+        assert p.main.seed == 0x5EED
+
+    @pytest.mark.parametrize("eviction", ("sampled_frequency", "slru"))
+    def test_one_jitted_call_per_decision(self, eviction):
+        """Acceptance: at most one jitted device call per admission
+        decision — and with no aging reset due, exactly one (zero staged
+        flushes), for both the mirror walk and the prefix kernel."""
+        tr = make_trace("msr2", seed=9, scale=0.0008)
+        cap = max(1, int(tr.total_object_bytes * 0.02))
+        p = SizeAwareWTinyLFU(
+            cap, admission="av", eviction=eviction, data_plane="device",
+            expected_entries=max(64, int(cap / tr.mean_object_size)),
+            sketch_kwargs={"sample_factor": 10_000},  # no resets this trace
+        )
+        counts = {"decisions": 0}
+        orig_admit = p._admit
+
+        def spy_admit(*args):
+            counts["decisions"] += 1
+            return orig_admit(*args)
+
+        p._admit = spy_admit
+        SimulationEngine().run(p, tr)
+        plane = p.admission_policy._device
+        assert counts["decisions"] > 20, "trace too small to be meaningful"
+        assert plane.calls == counts["decisions"]
+        assert plane.staged_flushes == 0
+
+    def test_staged_flush_only_at_reset_boundaries(self):
+        """Pending batches that straddle an aging reset take the staged
+        path (the only case allowed to add a device call); the sketch ops
+        counter must keep matching scalar driving."""
+        tr = make_trace("msr2", seed=9, scale=0.0008)
+        cap = max(1, int(tr.total_object_bytes * 0.02))
+        p = SizeAwareWTinyLFU(cap, data_plane="device", expected_entries=16,
+                              eviction="sampled_frequency")
+        SimulationEngine().run(p, tr)
+        plane = p.admission_policy._device
+        assert p.sketch.resets > 0, "sketch never aged; shrink expected_entries"
+        assert plane.staged_flushes > 0
+        assert plane.staged_flushes <= p.sketch.resets + 1
+        assert p.sketch._ops < p.sketch.sample_size
+
+    def test_mirror_tracks_eviction_policy(self):
+        """The device mirror is maintained incrementally by the insert/evict
+        hooks: after an arbitrary run it matches the policy's slot table
+        without having been re-uploaded per decision."""
+        tr = make_trace("cdn1", seed=3, scale=0.0008)
+        cap = max(1, int(tr.total_object_bytes * 0.02))
+        p = SizeAwareWTinyLFU(cap, admission="qv", eviction="sampled_size",
+                              data_plane="device",
+                              expected_entries=max(64, int(cap / tr.mean_object_size)))
+        SimulationEngine().run(p, tr)
+        plane = p.admission_policy._device
+        assert plane.calls > 20
+        n = len(p.main.keys)
+        mirror_keys = plane.mirror._keys[:n].tolist()
+        mirror_sizes = plane.mirror._sizes[:n].tolist()
+        assert mirror_keys == [k & 0xFFFFFFFF for k in p.main.keys]
+        assert mirror_sizes == [p.main.sizes[k] for k in p.main.keys]
+        # incremental maintenance: a handful of full uploads (first use +
+        # growth doublings), not one per decision
+        assert plane.mirror.uploads < plane.calls / 4
+
+    @pytest.mark.parametrize("admission", ("iv", "qv", "av"))
+    def test_three_way_trace_equivalence(self, admission):
+        """Spot three-way check on an engine-driven trace (the exhaustive
+        21-combo grid runs in tests/test_property_differential.py)."""
+        tr = make_trace("msr2", seed=5, scale=0.0008)
+        cap = max(1, int(tr.total_object_bytes * 0.02))
+        kw = dict(expected_entries=max(64, int(cap / tr.mean_object_size)),
+                  sketch_backend="cms")
+        spec = f"wtlfu-{admission}-sampled_frequency_size"
+        out = []
+        for plane in ("scalar", "batched", "device"):
+            p = REGISTRY.build(spec, cap, data_plane=plane, **kw)
+            rec = HitMaskRecorder()
+            SimulationEngine(instruments=(rec,)).run(p, tr)
+            out.append((p, rec.hits))
+        (a, ha), (b, hb), (c, hc) = out
+        _assert_byte_identical(a, b, ha, hb, f"{spec} scalar-vs-batched")
+        _assert_byte_identical(a, c, ha, hc, f"{spec} scalar-vs-device")
 
 
 class TestFusedSketchPath:

@@ -90,6 +90,41 @@ class TestCMSKernel:
         assert est[0] >= 5 and est[1] == 0
 
 
+class TestDeviceSketchAging:
+    """Regression (ISSUE 4): ``DeviceSketch.increment`` applied a whole
+    batch and then reset at most once, so a 1000-key batch at
+    ``sample_size=160`` left ``_ops=500 >= sample_size`` and skipped ~5
+    agings. Batches must split at reset boundaries like ``CMSSketch.flush``
+    so batched and scalar driving stay identical."""
+
+    def test_batch_matches_scalar_driving(self):
+        keys = [(i * 17) % 97 for i in range(1000)]
+        batched = cms_ops.DeviceSketch(16, sample_factor=10)  # sample_size=160
+        batched.increment(jnp.asarray(keys, jnp.int32))
+        scalar = cms_ops.DeviceSketch(16, sample_factor=10)
+        for k in keys:
+            scalar.increment(jnp.asarray([k], jnp.int32))
+        assert batched._ops == scalar._ops
+        np.testing.assert_array_equal(
+            np.asarray(batched.table), np.asarray(scalar.table))
+
+    def test_ops_counter_stays_inside_sample(self):
+        sk = cms_ops.DeviceSketch(16, sample_factor=10)
+        sk.increment(jnp.asarray(list(range(1000)), jnp.int32))
+        assert sk._ops < sk.sample_size
+
+    def test_split_is_batch_size_invariant(self):
+        keys = list(range(500))
+        whole = cms_ops.DeviceSketch(16, sample_factor=10)
+        whole.increment(jnp.asarray(keys, jnp.int32))
+        chunked = cms_ops.DeviceSketch(16, sample_factor=10)
+        for lo in range(0, 500, 77):
+            chunked.increment(jnp.asarray(keys[lo:lo + 77], jnp.int32))
+        assert whole._ops == chunked._ops
+        np.testing.assert_array_equal(
+            np.asarray(whole.table), np.asarray(chunked.table))
+
+
 class TestCounterDraws:
     """The device-side counter RNG (uint32 limb splitmix64) must reproduce
     the host victim-sampling stream of repro.core.crng bit-for-bit."""
@@ -118,6 +153,48 @@ class TestCounterDraws:
         dev = np.asarray(cms_ops.counter_draws(seed, decision, start, 16))
         combined = dev[0].astype(np.uint64) << np.uint64(32) | dev[1].astype(np.uint64)
         np.testing.assert_array_equal(combined, host)
+
+
+class TestDeviceAdmissionPrimitives:
+    """In-kernel building blocks of the device admission plane must agree
+    exactly with their host twins."""
+
+    @pytest.mark.parametrize("n", [1, 2, 5, 7, 127, 1000, 1 << 20, (1 << 24) - 1])
+    def test_mod_u64_matches_host(self, n):
+        from repro.core import crng
+        from repro.kernels.admission import _mod_u64
+
+        draws = crng.draws(3, 7, 0, 256)
+        hi = jnp.asarray((draws >> np.uint64(32)).astype(np.uint32))
+        lo = jnp.asarray((draws & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+        got = np.asarray(jax.jit(_mod_u64)(hi, lo, jnp.uint32(n)))
+        np.testing.assert_array_equal(got, (draws % np.uint64(n)).astype(np.uint32))
+
+    def test_step_slots_match_host_draw_stream(self):
+        from repro.core import crng
+        from repro.kernels.admission import _step_slots
+
+        seed, decision, n = 0xA11CE, 42, 37
+        base = crng.stream_key(seed, decision)
+        for step in (0, 1, 13):
+            host = crng.draws(seed, decision, step * 5, 5) % np.uint64(n)
+            dev = np.asarray(_step_slots(
+                jnp.uint32(base >> 32), jnp.uint32(base & 0xFFFFFFFF),
+                step * 5, 5, jnp.uint32(n)))
+            np.testing.assert_array_equal(dev, host.astype(np.int32))
+
+    def test_argmin_frac_exact_ordering(self):
+        from repro.kernels.admission import _argmin_frac
+
+        # 3/7 < 5/11 < 1/2 == 2/4: exact cross-multiply ordering with
+        # first-position tie-breaking, invalid entries ignored
+        num = jnp.asarray([1, 5, 3, 2, 0, 0, 0, 0], jnp.int32)
+        den = jnp.asarray([2, 11, 7, 4, 1, 1, 1, 1], jnp.int32)
+        pos = jnp.arange(8, dtype=jnp.int32)
+        valid = jnp.asarray([1, 1, 1, 1, 0, 0, 0, 0], bool)
+        assert int(_argmin_frac(num, den, pos, valid)) == 2
+        valid = jnp.asarray([1, 0, 0, 1, 0, 0, 0, 0], bool)  # tie 1/2 vs 2/4
+        assert int(_argmin_frac(num, den, pos, valid)) == 0
 
 
 # ---------------------------------------------------------------------------

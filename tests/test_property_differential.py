@@ -1,16 +1,21 @@
-"""Property-based differential suite: batched vs scalar admission planes.
+"""Property-based differential suite: scalar vs batched vs device planes.
 
 ISSUE 3 acceptance: with counter-based victim sampling every eviction
 policy is peek-stable, so ``data_plane="batched"`` must be **byte-identical**
 to ``"scalar"`` — same hit/miss decision stream, same ``CacheStats``
 counters, same final cache contents — for every admission x eviction combo,
-sampled evictions included.
+sampled evictions included. ISSUE 4 extends the assertion three ways:
+``data_plane="device"`` (the closed-loop device-resident decision kernel,
+CMS backend) must match both host planes over the same 21-combo grid.
 
-Three layers:
+Four layers:
 
 * a **seeded exhaustive grid** over all 21 combos that runs without
   hypothesis (tier-1), re-seedable via ``REPRO_DIFF_SEED`` (the nightly CI
   seed-matrix job reruns it under several fixed seeds);
+* the **device-plane grid**: the same 21 combos under ``sketch_backend=
+  "cms"``, asserting scalar == batched == device (decisions, CacheStats,
+  final cache contents, sampling fallback counters), same reseeding;
 * **hypothesis properties** generating random traces (key skew, size
   distributions, capacities) and random ``PolicySpec`` strings (window
   fraction, pruning, ``?seed=``), asserting plane equivalence and spec
@@ -127,6 +132,71 @@ class TestSeededGrid:
         assert outs[0] != outs[1]
 
 
+class TestDeviceSeededGrid:
+    """ISSUE 4 acceptance: ``data_plane="device"`` — the closed-loop
+    sample->score->select decision kernel — is byte-identical to BOTH host
+    planes for every admission x eviction combo under the CMS backend,
+    reseedable via ``REPRO_DIFF_SEED``."""
+
+    @pytest.mark.parametrize("admission,eviction", ALL_COMBOS)
+    def test_three_planes_byte_identical(self, admission, eviction):
+        rng = np.random.default_rng([DIFF_SEED, 0xDE1CE, _combo_key(admission, eviction)])
+        keys, sizes = _synth_trace(rng, n=220, key_space=32, size_mode="uniform")
+        cap = max(120, int(np.mean(sizes) * 8))
+        spec = (f"wtlfu-{admission}-{eviction}"
+                f"?window_frac=0.1&seed={DIFF_SEED}&sketch_backend=cms")
+        out = [
+            _run_plane(spec, cap, keys, sizes, plane, expected_entries=64)
+            for plane in ("scalar", "batched", "device")
+        ]
+        (a, ha), (b, hb), (c, hc) = out
+        _assert_identical(a, b, ha, hb, f"{spec} scalar-vs-batched")
+        _assert_identical(a, c, ha, hc, f"{spec} scalar-vs-device")
+        assert a.stats.evictions > 0, f"{spec}: trace never evicted"
+        if eviction not in ("lru", "slru"):
+            assert a.main.fallback_scans == c.main.fallback_scans, \
+                f"{spec}: device fallback-scan count diverges"
+
+    @pytest.mark.parametrize("eviction", ("sampled_frequency", "slru"))
+    def test_device_pallas_branch_matches_scalar(self, eviction):
+        """The decision kernel's Pallas branch (``use_pallas=True``, the
+        TPU path — fused ``cms_update_estimate`` launch incl. the padded
+        update-lane sentinel masking) must match the scalar reference too;
+        off-TPU the default resolves to the value-identical jnp branch, so
+        without forcing it this path would only ever run on TPU."""
+        rng = np.random.default_rng([DIFF_SEED, 0x9A11A5, _combo_key("av", eviction)])
+        keys, sizes = _synth_trace(rng, n=100, key_space=24, size_mode="uniform")
+        cap = max(120, int(np.mean(sizes) * 8))
+        spec = f"wtlfu-av-{eviction}?seed={DIFF_SEED}&sketch_backend=cms"
+        # scalar reference on the default (jnp) branch: estimates are pure
+        # table reads, so use_pallas cannot change its values — and Pallas
+        # interpret mode per scalar estimate would dominate the suite
+        a, ha = _run_plane(spec, cap, keys, sizes, "scalar", expected_entries=64)
+        c, hc = _run_plane(spec, cap, keys, sizes, "device", expected_entries=64,
+                           sketch_kwargs={"use_pallas": True})
+        assert c.sketch.use_pallas
+        _assert_identical(a, c, ha, hc, f"{spec} device/use_pallas=True")
+
+    @pytest.mark.parametrize("admission,eviction",
+                             [("iv", "random"), ("qv", "sampled_frequency"), ("av", "slru")])
+    def test_three_planes_across_aging_resets(self, admission, eviction):
+        """A small sketch forces aging resets mid-trace: the device plane
+        must stage its pending flush at the same boundaries the host planes
+        do (same resets, same tables, same decisions)."""
+        rng = np.random.default_rng([DIFF_SEED, 0xA61, _combo_key(admission, eviction)])
+        keys, sizes = _synth_trace(rng, n=400, key_space=40, size_mode="clustered")
+        cap = max(120, int(np.mean(sizes) * 8))
+        spec = f"wtlfu-{admission}-{eviction}?seed={DIFF_SEED}&sketch_backend=cms"
+        out = [
+            _run_plane(spec, cap, keys, sizes, plane, expected_entries=16)
+            for plane in ("scalar", "device")
+        ]
+        (a, ha), (c, hc) = out
+        assert a.sketch.resets > 0, "trace too short to age the sketch"
+        assert a.sketch.resets == c.sketch.resets
+        _assert_identical(a, c, ha, hc, f"{spec} across resets")
+
+
 class TestHypothesisDifferential:
     @settings(max_examples=30, deadline=None,
               suppress_health_check=(HealthCheck.too_slow,))
@@ -213,7 +283,8 @@ class TestCMSBackendDifferential:
         out = [
             _run_plane(spec, cap, keys, sizes, plane,
                        expected_entries=64, sketch_backend="cms")
-            for plane in ("scalar", "batched")
+            for plane in ("scalar", "batched", "device")
         ]
-        (a, ha), (b, hb) = out
+        (a, ha), (b, hb), (c, hc) = out
         _assert_identical(a, b, ha, hb, f"cms:{spec}")
+        _assert_identical(a, c, ha, hc, f"cms-device:{spec}")

@@ -179,6 +179,52 @@ class TestHitPaths:
         assert st.bytes_hit == 50
 
 
+class TestAdaptiveWindowFloor:
+    """Regression (ISSUE 4): ``_maybe_adapt`` floored the window at
+    ``capacity // 100``, which is 0 for capacities below 100 bytes —
+    downward climber steps drove ``window_cap`` to 0, violating the
+    constructor's ``max(1, ...)`` invariant and silently disabling the
+    Window."""
+
+    def test_downward_step_clamps_to_one(self):
+        p = SizeAwareWTinyLFU(64, adaptive_window=True, expected_entries=16)
+        assert p.window_cap >= 1
+        p._adapt_dir = -1
+        p._adapt_accesses = p._adapt_every  # next miss triggers an adapt
+        p.access(999, 1)
+        assert p.window_cap >= 1, "adaptive window collapsed to zero"
+        assert p.main_cap == p.capacity - p.window_cap
+
+    def test_64_byte_adaptive_cache_keeps_its_window(self):
+        """Driven purely through the public API: a hit-rich epoch steps the
+        window up, then all-miss epochs reverse the climber and walk it
+        back down — the floor must hold at >= 1 the whole way, and the
+        Window must still accept small objects afterwards."""
+        p = SizeAwareWTinyLFU(64, adaptive_window=True, expected_entries=16)
+        epoch = p._adapt_every
+        # epoch 1: key 1 oscillates Window->Main, every revisit hits, while
+        # the unique keys keep the miss counter (the adapt clock) advancing;
+        # stop exactly when the first adapt fires so no stray hits leak into
+        # the all-miss epochs (their ratio must be exactly 0 epoch over
+        # epoch, or the climber would re-reverse instead of stepping down)
+        i = 0
+        while p._adapt_prev_ratio < 0:
+            p.access(1, 1)
+            p.access(100 + i, 1)
+            i += 1
+            assert i <= 2 * epoch, "first adapt never fired"
+        # epochs 2-4: unique keys only -> hit ratio falls to 0, climber
+        # reverses, then keeps stepping the window down into the floor
+        k = 1_000_000  # disjoint from every phase-1 key
+        for _ in range(3 * epoch + 3):
+            p.access(k, 1)
+            k += 1
+            assert p.window_cap >= 1, "adaptive window collapsed to zero"
+            assert p.window_cap + p.main_cap == p.capacity
+        p.access(k + 1, 1)
+        assert (k + 1) in p.window, "Window stopped admitting small objects"
+
+
 @pytest.mark.parametrize("admission", ADMISSIONS)
 @pytest.mark.parametrize("eviction", EVICTIONS)
 def test_all_combinations_run(admission, eviction):

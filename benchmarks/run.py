@@ -5,26 +5,50 @@
 Emits ``name,us_per_call,derived`` CSV rows and writes JSON to
 ``benchmarks/results/``. Scale with REPRO_BENCH_SCALE (default 0.08).
 
-Running the ``overhead`` bench additionally writes ``BENCH_overhead.json``
-at the repo root: one compact ``(policy, data_plane, trace,
-accesses_per_sec)`` row per measured policy run, so the throughput
-trajectory across PRs is machine-readable without parsing the full
-``benchmarks/results/overhead.json`` (nightly CI uploads it as an
-artifact).
+Running the ``overhead`` bench additionally updates ``BENCH_overhead.json``
+at the repo root: a **trajectory** file — each run APPENDS one dated entry
+of compact ``(policy, data_plane, trace, accesses_per_sec)`` rows instead
+of overwriting, so throughput across PRs and nightly runs is
+machine-readable without parsing the full
+``benchmarks/results/overhead.json`` (nightly CI uploads the trajectory
+as an artifact). Stable schema::
+
+    {"schema": 2,
+     "history": [{"timestamp": "<UTC ISO-8601 | null>", "rows": [...]}]}
+
+Legacy single-run files (a bare row list, schema 1) are migrated in place
+as one undated entry; history is capped at the most recent
+``BENCH_HISTORY_MAX`` entries.
 """
 
 from __future__ import annotations
 
+import datetime
 import json
 import pathlib
 import sys
 import time
 
 BENCH_OVERHEAD_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_overhead.json"
+#: Trajectory length cap: nightly appends one entry per run.
+BENCH_HISTORY_MAX = 180
+
+
+def _load_bench_history() -> "list[dict]":
+    try:
+        with open(BENCH_OVERHEAD_PATH) as f:
+            prior = json.load(f)
+    except (OSError, ValueError):
+        return []
+    if isinstance(prior, list):  # schema 1: one overwritten row list
+        return [{"timestamp": None, "rows": prior}] if prior else []
+    if isinstance(prior, dict) and isinstance(prior.get("history"), list):
+        return prior["history"]
+    return []
 
 
 def write_bench_overhead(rows: "list[dict]") -> None:
-    """Condense overhead rows into the repo-root perf-trajectory file."""
+    """Append this run's condensed overhead rows to the perf trajectory."""
     out = [
         {
             "policy": r["policy"],
@@ -36,8 +60,12 @@ def write_bench_overhead(rows: "list[dict]") -> None:
         for r in rows
         if r.get("policy") and r.get("us_per_access")
     ]
+    history = _load_bench_history()
+    stamp = datetime.datetime.now(datetime.timezone.utc).isoformat(timespec="seconds")
+    history.append({"timestamp": stamp, "rows": out})
+    history = history[-BENCH_HISTORY_MAX:]
     with open(BENCH_OVERHEAD_PATH, "w") as f:
-        json.dump(out, f, indent=1)
+        json.dump({"schema": 2, "history": history}, f, indent=1)
 
 
 def main() -> None:
@@ -71,7 +99,7 @@ def main() -> None:
         rows = benches[name]()
         if name == "overhead" and rows:
             write_bench_overhead(rows)
-            print(f"# wrote {BENCH_OVERHEAD_PATH}", flush=True)
+            print(f"# appended trajectory entry to {BENCH_OVERHEAD_PATH}", flush=True)
         print(f"# {name} done in {time.perf_counter() - t0:.1f}s", flush=True)
 
 

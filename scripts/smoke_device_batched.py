@@ -1,0 +1,69 @@
+#!/usr/bin/env python
+"""Tier-1 CI smoke row for the decision-batched device admission plane.
+
+Fast end-to-end check (small trace, one spec) that ``device_batched``
+
+* builds from a spec string and resolves the CMS backend,
+* actually batches decisions (fewer launches than decisions), and
+* stays byte-identical to the scalar reference plane.
+
+Exits non-zero on any divergence; prints a one-line summary row. The
+exhaustive 21-combo grid runs in the test suite — this is the cheap
+always-on canary wired into ``.github/workflows/ci.yml``.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.core import REGISTRY, HitMaskRecorder, SimulationEngine
+from repro.traces import make_trace
+
+SPEC = "wtlfu-qv-sampled_frequency?sketch_backend=cms&seed=0x5EED"
+
+
+def main() -> int:
+    tr = make_trace("msr2", seed=9, scale=0.0015)
+    cap = max(1, int(tr.total_object_bytes * 0.02))
+    ee = max(64, int(cap / tr.mean_object_size))
+    runs = {}
+    for plane in ("scalar", "device_batched"):
+        p = REGISTRY.build(SPEC, cap, data_plane=plane, expected_entries=ee,
+                           chunk=16)
+        rec = HitMaskRecorder()
+        t0 = time.perf_counter()
+        SimulationEngine(instruments=(rec,)).run(p, tr)
+        runs[plane] = (p, rec.hits, time.perf_counter() - t0)
+    (a, ha, _), (b, hb, wall) = runs["scalar"], runs["device_batched"]
+    if not (ha == hb).all():
+        print("FAIL: hit/miss streams diverge", file=sys.stderr)
+        return 1
+    for field in ("accesses", "hits", "bytes_hit", "victims_examined",
+                  "admissions", "rejections", "evictions"):
+        if getattr(a.stats, field) != getattr(b.stats, field):
+            print(f"FAIL: stats.{field} diverges", file=sys.stderr)
+            return 1
+    if a.main.sizes != b.main.sizes:
+        print("FAIL: final cache contents diverge", file=sys.stderr)
+        return 1
+    pipe = b.admission_policy._device_batch
+    launches = pipe.chunk_calls + b.admission_policy._device.calls
+    if pipe.decisions < 50:
+        print(f"FAIL: only {pipe.decisions} decisions — trace too small",
+              file=sys.stderr)
+        return 1
+    if launches >= pipe.decisions:
+        print(f"FAIL: {launches} launches for {pipe.decisions} decisions — "
+              "decision batching is not engaging", file=sys.stderr)
+        return 1
+    print(
+        f"smoke-device-batched OK: {SPEC} decisions={pipe.decisions} "
+        f"launches={launches} batched={pipe.batched_decisions} "
+        f"resyncs={pipe.resyncs} accesses/s={a.stats.accesses / wall:.0f}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

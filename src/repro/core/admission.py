@@ -196,6 +196,32 @@ class AdmissionPolicy:
         across the full admission x eviction grid in tests."""
         return self._device.decide(key, size, needed, main, stats)
 
+    def bind_device_batch_plane(self, main: "EvictionPolicy", *,
+                                chunk: int = 64, victim_cap: int = 16):
+        """Build the decision-batched device pipeline over ``main`` (the
+        ``data_plane="device_batched"`` engine; also what ``"device"``
+        auto-upgrades to when the engine drives ``access_batch``). Wraps
+        the per-decision plane from :meth:`bind_device_plane` — binding it
+        first if needed — so speculation-depth resyncs fall back onto the
+        exact same per-decision kernels. Returns the bound pipeline."""
+        from repro.kernels.admission import DeviceBatchedAdmissionPlane
+
+        if not hasattr(self, "_device"):
+            self.bind_device_plane(main)
+        self._device_batch = DeviceBatchedAdmissionPlane(
+            self._device, chunk=chunk, victim_cap=victim_cap)
+        return self._device_batch
+
+    def admit_device_batch(self, key: int, size: int, needed: int,
+                           main: "EvictionPolicy", stats: "CacheStats") -> bool:
+        """Scalar-drive twin of the decision-batched plane: a lone
+        ``access()`` call (or an adaptive-window drain) offers exactly one
+        decision, so it resolves through the per-decision device kernel —
+        byte-identical by construction. Decision *batching* engages on the
+        chunk path (``DeviceBatchedAdmissionPlane.drive_chunk``), which the
+        owning policy's ``access_batch`` routes whole chunks into."""
+        return self.admit_device(key, size, needed, main, stats)
+
 
 class IVAdmission(AdmissionPolicy):
     """Implicit Victims (Alg. 2 — Caffeine): compare against the *first*

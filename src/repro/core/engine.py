@@ -13,7 +13,8 @@ Replaces the old free-function ``simulate`` loop with a
 * drives a policy's ``access_batch(keys, sizes)`` fast path **by default**
   whenever one exists (e.g. :class:`~repro.core.tinylfu.SizeAwareWTinyLFU`,
   whose batched admission data plane scores each decision with one fused
-  Pallas CMS kernel call) — the scalar loop remains for per-access
+  Pallas CMS kernel call, and whose device planes batch whole decision
+  chunks per kernel launch) — the scalar loop remains for per-access
   instrumentation and as the reference semantics;
 * runs pluggable :class:`Instrument` hooks — the old ``check_invariants``
   flag is now the :class:`CapacityInvariant` instrument, and
@@ -143,8 +144,8 @@ class SimulationResult:
     wall_seconds: float = 0.0
     used_batch: bool = False
     #: The policy's resolved admission data plane ("scalar" / "batched" /
-    #: "device"), or None for policies without one — benchmark rows key
-    #: their per-plane throughput comparisons on this.
+    #: "device" / "device_batched"), or None for policies without one —
+    #: benchmark rows key their per-plane throughput comparisons on this.
     data_plane: str | None = None
 
 
@@ -280,6 +281,21 @@ class SimulationEngine:
         for keys, sizes in _iter_chunks(trace, self.chunk_size, limit):
             lo = 0
             n = len(keys)
+            # Sub-chunk splitting invariant (regression-swept over every
+            # (warmup, chunk_size, snapshot_every) shape in
+            # tests/test_registry_engine.py::TestEngine::
+            # test_snapshot_alignment_sweep): warmup ending mid-chunk caps
+            # the sub-chunk at the warmup boundary, and only post-warmup
+            # sub-chunks are capped at the next snapshot point — so the
+            # first post-warmup snapshot lands exactly `snapshot_every`
+            # accesses after warmup. Both caps split *around* a driven
+            # sub-chunk, never inside one, which is also what lets
+            # decision-batching policies (device planes) keep their
+            # buffered admissions: each access_batch call returns with the
+            # buffer resolved and stats exact before a snapshot can read
+            # them. since_snap < snapshot_every holds at every iteration
+            # top (driven <= snapshot_every - since_snap, reset on
+            # snapshot), so the hi cap below can never go non-positive.
             while lo < n:
                 hi = n
                 if to_warm > 0:

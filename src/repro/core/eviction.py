@@ -319,8 +319,15 @@ class SampledEviction(EvictionPolicy):
         """Register a slot-write observer and replay the current table into
         it. The mirror sees ``record(slot, key, size)`` for the insert
         append and the swap-remove back-fill — exactly the writes that keep
-        a dense ``slot -> (key, size)`` twin in sync with ``self.keys``."""
+        a dense ``slot -> (key, size)`` twin in sync with ``self.keys``.
+        Mirrors exposing the batched ``load`` hook (the device admission
+        planes') get the existing table as one vectorized scatter instead
+        of len(keys) per-slot records."""
         self._mirror = mirror
+        load = getattr(mirror, "load", None)
+        if load is not None:
+            load(self.keys, self.sizes)
+            return
         for i, k in enumerate(self.keys):
             mirror.record(i, k, self.sizes[k])
 

@@ -66,9 +66,41 @@ def parse_scalar(text: str) -> Any:
     return text
 
 
+def _canon_scalar(value: Any) -> Any:
+    """Spec-string canonical form of a param value: the fixed point of
+    ``parse_scalar`` ∘ ``_format_scalar``.
+
+    ``PolicySpec.make`` runs every param through this so that
+    ``parse(to_string()) == spec`` holds for *every* accepted value, not
+    just the ones whose repr happens to survive re-parsing:
+
+    * numeric-looking strings (``"123"``, ``"1e3"``, ``"0x10"``, ``"+5"``)
+      are indistinguishable from numbers once rendered into a spec string,
+      so they canonicalize to the number ``parse_scalar`` would return
+      (the schema re-coerces to ``str`` at build time when the policy's
+      parameter is declared ``str``);
+    * NaN floats canonicalize to the string ``"nan"`` — a NaN *value*
+      breaks ``==`` by definition (even ``parse(s) == parse(s)`` would
+      fail), while the string form round-trips and still coerces to the
+      float at build time.
+    """
+    if isinstance(value, bool):
+        return value  # renders as 1/0; bool == int keeps equality exact
+    if isinstance(value, float) and value != value:  # NaN
+        return "nan"
+    if isinstance(value, str):
+        parsed = parse_scalar(value)
+        if isinstance(parsed, str):
+            return parsed
+        return _canon_scalar(parsed)  # numeric-looking: store the number
+    return value
+
+
 def _format_scalar(value: Any) -> str:
     if isinstance(value, bool):
         return "1" if value else "0"
+    if isinstance(value, float) and value != value:  # NaN: repr round-trips
+        return "nan"  # only as a string (canonical form; see _canon_scalar)
     if isinstance(value, (int, float)):
         return repr(value)
     if isinstance(value, str):
@@ -120,7 +152,10 @@ class PolicySpec:
 
     ``params`` is a sorted tuple of ``(name, value)`` pairs so specs are
     hashable and order-insensitive: ``PolicySpec.make("lru", a=1, b=2) ==
-    PolicySpec.make("lru", b=2, a=1)``.
+    PolicySpec.make("lru", b=2, a=1)``. Scalar values are stored in
+    spec-string canonical form (see :func:`_canon_scalar`), which is what
+    makes ``PolicySpec.parse(spec.to_string()) == spec`` an identity for
+    every value the schema accepts.
     """
 
     name: str
@@ -128,7 +163,10 @@ class PolicySpec:
 
     @classmethod
     def make(cls, name: str, **params: Any) -> "PolicySpec":
-        return cls(name, tuple(sorted(params.items())))
+        return cls(
+            name,
+            tuple(sorted((k, _canon_scalar(v)) for k, v in params.items())),
+        )
 
     @property
     def params_dict(self) -> dict[str, Any]:

@@ -53,7 +53,7 @@ EVICTIONS = (
 )
 
 SKETCH_BACKENDS = ("auto", "host", "cms")
-DATA_PLANES = ("auto", "batched", "scalar", "device")
+DATA_PLANES = ("auto", "batched", "scalar", "device", "device_batched")
 
 
 def _wtlfu_alias(name: str) -> dict | None:
@@ -110,13 +110,22 @@ class SizeAwareWTinyLFU:
         the WHOLE decision — victim draws, key/size gather, fused CMS
         flush+estimate, verdict replay, victim selection — as one jitted
         device call (CMS backend only; see
-        :mod:`repro.kernels.admission`). The default ``"auto"`` picks per
-        sketch backend (``sketch.batched_native``): batched for the CMS
-        kernels — one fused launch per decision beats per-victim kernel
-        calls — and the scalar walk for the host sketch, where CPython
-        method dispatch makes direct calls the lightweight option at
-        typical victim counts. Decisions are byte-identical on every plane
-        (asserted trace-wide in tests).
+        :mod:`repro.kernels.admission`); ``"device_batched"`` additionally
+        batches whole *chunks* of decisions per launch (speculative
+        window-cascade unrolling in a ``lax.scan``; ``chunk=`` sets the
+        buffer). Under ``access_batch`` (the engine's default drive path)
+        ``"device"`` auto-upgrades to the same decision-batched pipeline —
+        per-decision dispatch is pure overhead once the caller already
+        hands over chunks. The default ``"auto"`` picks per sketch backend
+        (``sketch.batched_native``): batched for the CMS kernels — one
+        fused launch per decision beats per-victim kernel calls — and the
+        scalar walk for the host sketch, where CPython method dispatch
+        makes direct calls the lightweight option at typical victim
+        counts. Decisions are byte-identical on every plane (asserted
+        trace-wide in tests).
+    chunk: decision-buffer capacity of the ``device_batched`` pipeline
+        (decisions resolved per chunk-kernel launch); ignored by the other
+        planes. Spec-string ``?chunk=`` plumbs it through the registry.
     """
 
     def __init__(
@@ -133,6 +142,7 @@ class SizeAwareWTinyLFU:
         sketch_backend: str = "auto",
         sketch_kwargs: dict | None = None,
         data_plane: str = "auto",
+        chunk: int = 64,
     ):
         if admission not in ADMISSIONS:
             raise ValueError(f"admission must be one of {ADMISSIONS}")
@@ -140,12 +150,13 @@ class SizeAwareWTinyLFU:
             raise ValueError(f"sketch_backend must be one of {SKETCH_BACKENDS}")
         if data_plane not in DATA_PLANES:
             raise ValueError(f"data_plane must be one of {DATA_PLANES}")
+        device_plane = data_plane in ("device", "device_batched")
         if sketch_backend == "auto":
-            sketch_backend = "cms" if data_plane == "device" else "host"
-        if data_plane == "device" and sketch_backend != "cms":
+            sketch_backend = "cms" if device_plane else "host"
+        if device_plane and sketch_backend != "cms":
             raise ValueError(
-                'data_plane="device" requires sketch_backend="cms" (the '
-                "decision kernel runs over the device-resident CMS table)"
+                f'data_plane="{data_plane}" requires sketch_backend="cms" '
+                "(the decision kernel runs over the device-resident CMS table)"
             )
         self.capacity = int(capacity)
         self.window_cap = max(1, int(capacity * window_frac))
@@ -195,9 +206,20 @@ class SizeAwareWTinyLFU:
         if data_plane == "auto":
             data_plane = "batched" if getattr(self.sketch, "batched_native", False) else "scalar"
         self.data_plane = data_plane  # resolved, never "auto"
-        if data_plane == "device":
+        #: Decision-batched chunk pipeline; set for BOTH device planes —
+        #: ``access_batch`` routes whole chunks through it ("device"
+        #: auto-upgrades once the caller hands over chunks), while scalar
+        #: ``access`` (and the adaptive-window drain) stays per-decision.
+        self._device_pipeline = None
+        if device_plane:
             self.admission_policy.bind_device_plane(self.main)
-            self._admit = self.admission_policy.admit_device
+            self._device_pipeline = self.admission_policy.bind_device_batch_plane(
+                self.main, chunk=chunk)
+            self._admit = (
+                self.admission_policy.admit_device_batch
+                if data_plane == "device_batched"
+                else self.admission_policy.admit_device
+            )
         elif data_plane == "batched":
             self._admit = self.admission_policy.admit
         else:
@@ -240,8 +262,14 @@ class SizeAwareWTinyLFU:
         hot attributes hoisted out, and with the ``cms`` sketch backend the
         per-access increments are buffered and flushed through one batched
         Pallas kernel call fused with the next admission decision's victim
-        scoring.
+        scoring. Under the device planes the chunk is handed straight to
+        the decision-batched pipeline, which defers admission decisions
+        and resolves them in batched ``lax.scan`` launches — still
+        byte-identical, with every buffered decision resolved (and stats
+        exact) by the time this returns.
         """
+        if self._device_pipeline is not None:
+            return self._device_pipeline.drive_chunk(self, keys, sizes)
         n = len(keys)
         hits = np.empty(n, dtype=bool)
         keys = keys.tolist() if hasattr(keys, "tolist") else list(keys)

@@ -35,6 +35,20 @@ Two decision kernels cover the admission x eviction grid:
   for QV's first-loss stop, cumulative frequencies for AV's early-pruning
   stop) — still one jitted call, no per-victim host round-trips.
 
+On top of the per-decision kernels, ``_decide_sampled_chunk`` batches a
+whole CHUNK of decisions per launch for the sampling mains (the
+``data_plane="device_batched"`` tentpole): a ``lax.scan`` speculatively
+unrolls the window->main cascade — per-decision pending-increment
+segments, the free-space check, the decision-counter advance (a 64-bit
+limb GAMMA add replaying ``begin_decision`` + ``crng.stream_key``), the
+shared sample walk, and the verdict's swap-remove/insert applied to the
+in-scan mirror so decision ``d+1`` draws against post-``d`` state. The
+host-side :class:`DeviceBatchedAdmissionPlane` drives access chunks,
+defers decisions while no interleaved access can observe a pending
+verdict, and resyncs speculation overruns (aging reset, oversized
+segment, victim-cap overflow, mirror growth mid-chunk) through the
+per-decision plane — byte-identity preserved throughout.
+
 Byte-identity with the scalar walk rests on the same arguments as the
 batched plane (see :mod:`repro.core.admission`): estimates are pure reads
 of the flushed table, victim order is a peek-stable replay, and exactly one
@@ -63,11 +77,15 @@ import numpy as np
 
 from repro.core import crng
 
-from .cms.cms import cms_update_estimate_pallas
-from .cms.ops import _mix64_u32, _mul64_const
+from .cms.ops import _mix64_u32, _mul64_const, flush_scores
 from .cms.ref import row_indexes
 
-__all__ = ["DeviceAdmissionPlane", "DeviceMirror", "MAX_MIRROR_ENTRIES"]
+__all__ = [
+    "DeviceAdmissionPlane",
+    "DeviceBatchedAdmissionPlane",
+    "DeviceMirror",
+    "MAX_MIRROR_ENTRIES",
+]
 
 #: ``draw mod n`` is computed in uint32 8-bit Horner steps — exact for
 #: entry counts below 2**24 (16M cached objects).
@@ -136,60 +154,30 @@ def _argmin_frac(num, den, pos, valid):
     return pos[0]
 
 
-def _flush_scores(table, upd_keys, n_pend, est_keys, *, cap, use_pallas, interpret):
-    """Apply the pending-increment batch, then estimate ``est_keys`` on the
-    updated table — the fused flush+score step of the decision kernel.
-
-    With ``use_pallas`` this IS the fused ``cms_update_estimate`` Pallas
-    launch; otherwise a scatter-add + gather with identical values (the
-    same saturating non-conservative semantics as ``cms_update_ref``).
-    Padded update lanes are masked to the out-of-range ``width`` sentinel,
-    which no width block ever matches.
-    """
-    width = table.shape[1]
-    upd_idx = row_indexes(upd_keys, width)
-    upd_idx = jnp.where(jnp.arange(upd_keys.shape[0])[None, :] < n_pend, upd_idx, width)
-    est_idx = row_indexes(est_keys, width)
-    if use_pallas:
-        new_table, vals = cms_update_estimate_pallas(
-            table, upd_idx, est_idx, cap=cap, interpret=interpret)
-        return new_table, vals.min(0)
-    rows = table.shape[0]
-    counts = jnp.zeros_like(table).at[
-        jnp.arange(rows, dtype=jnp.int32)[:, None], upd_idx
-    ].add(1, mode="drop")
-    new_table = jnp.minimum(table + counts, cap)
-    vals = jnp.take_along_axis(new_table, est_idx, axis=1)
-    return new_table, vals.min(0)
+# The fused flush+score step (one Pallas launch, or the value-identical
+# scatter-add + gather) moved to the shared kernel-op layer so the segmented
+# decision-chunk path can reuse it: see ``repro.kernels.cms.ops.flush_scores``.
 
 
-# -- decision kernels --------------------------------------------------------
+def _sampled_walk(table, mkeys, msizes, n, cand_f, needed, base_hi, base_lo,
+                  *, discipline, rule, sample, early_pruning, vcap):
+    """The counter-RNG sample walk + IV/QV/AV verdict replay over the
+    current mirror state — the discipline core shared by the per-decision
+    kernel (``vcap = slots``: the victim buffer can never overflow) and the
+    decision-chunk scan (``vcap`` small and static; a decision that selects
+    more than ``vcap`` victims sets ``overflow`` so the host can resync it
+    through the per-decision path).
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("discipline", "rule", "sample", "early_pruning", "cap",
-                     "use_pallas", "interpret"),
-)
-def _decide_sampled(table, mkeys, msizes, wr_slots, wr_keys, wr_sizes,
-                    upd_keys, n_pend, n, cand_key, needed, base_hi, base_lo,
-                    *, discipline, rule, sample, early_pruning, cap,
-                    use_pallas, interpret):
-    """One whole admission decision over a sampling main, on device.
-
-    Mirror scatter -> fused CMS flush + candidate estimate -> counter-RNG
-    sample walk (``lax.while_loop``; each step gathers and scores only its
-    drawn pool) with the per-discipline stop rule -> verdict. Returns
-    ``(table, mkeys, msizes, admit, victims, n_evict, examined,
-    fallbacks)``; ``victims[:n_evict]`` are decision-time slots.
+    Returns ``(admit, victims[vcap], n_evict, examined, fallbacks,
+    overflow)``; ``victims`` holds walk-time slots, writes beyond ``vcap``
+    are dropped.
     """
     slots = mkeys.shape[0]
-    mkeys = mkeys.at[wr_slots].set(wr_keys, mode="drop")
-    msizes = msizes.at[wr_slots].set(wr_sizes, mode="drop")
-    cand = jnp.asarray(cand_key, jnp.int32).reshape(1)
-    table, est = _flush_scores(table, upd_keys, n_pend, cand,
-                               cap=cap, use_pallas=use_pallas, interpret=interpret)
-    cand_f = est[0]
     width = table.shape[1]
+    # The draw modulus: n >= 1 whenever a walk actually runs (needed > 0
+    # implies a non-empty main); the clamp only guards masked-out scan
+    # lanes from an integer mod-by-zero.
+    n_mod = jnp.maximum(n, 1).astype(jnp.uint32)
 
     def freq_of(keys_arr):
         # estimates are plain gathers of the (flushed, device-resident)
@@ -222,7 +210,7 @@ def _decide_sampled(table, mkeys, msizes, wr_slots, wr_keys, wr_sizes,
     pool_pos = jnp.arange(pool_pad, dtype=jnp.int32)
 
     def next_victim(taken, step, fallbacks):
-        raw = _step_slots(base_hi, base_lo, step * sample, sample, jnp.uint32(n))
+        raw = _step_slots(base_hi, base_lo, step * sample, sample, n_mod)
         if pool_pad > sample:
             raw = jnp.concatenate([raw, jnp.zeros(pool_pad - sample, jnp.int32)])
         free = ~taken[raw] & (pool_pos < sample)
@@ -243,7 +231,7 @@ def _decide_sampled(table, mkeys, msizes, wr_slots, wr_keys, wr_sizes,
 
     z = jnp.int32(0)
     taken0 = jnp.zeros(slots, bool)
-    victims0 = jnp.full(slots, -1, jnp.int32)
+    victims0 = jnp.full(vcap, -1, jnp.int32)
     if discipline == "iv":
         # IV compares against the FIRST victim only: draw it up front and
         # gate the covering walk on a win, mirroring the scalar plane's RNG
@@ -275,18 +263,18 @@ def _decide_sampled(table, mkeys, msizes, wr_slots, wr_keys, wr_sizes,
         if discipline != "iv":  # IV scores only its first victim (pre-loop)
             f = freq_of(mkeys[best][None])[0]
         if discipline == "iv":
-            victims = victims.at[g].set(best)
+            victims = victims.at[g].set(best, mode="drop")
             g = g + 1
             covered = covered + s
         elif discipline == "qv":
             examined = examined + 1
             win = cand_f >= f
-            victims = jnp.where(win, victims.at[g].set(best), victims)
+            victims = jnp.where(win, victims.at[g].set(best, mode="drop"), victims)
             g = g + jnp.int32(win)
             freed = freed + jnp.where(win, s, 0)
             stopped = ~win
         else:
-            victims = victims.at[g].set(best)
+            victims = victims.at[g].set(best, mode="drop")
             g = g + 1
             covered = covered + s
             vfreq = vfreq + f
@@ -310,6 +298,40 @@ def _decide_sampled(table, mkeys, msizes, wr_slots, wr_keys, wr_sizes,
         pruned = stopped | (covered < needed)
         admit = ~pruned & (cand_f >= vfreq)
         n_evict = jnp.where(admit, g, 0)
+    return admit, victims, n_evict, examined, fallbacks, g > jnp.int32(vcap)
+
+
+# -- decision kernels --------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("discipline", "rule", "sample", "early_pruning", "cap",
+                     "use_pallas", "interpret"),
+)
+def _decide_sampled(table, mkeys, msizes, wr_slots, wr_keys, wr_sizes,
+                    upd_keys, n_pend, n, cand_key, needed, base_hi, base_lo,
+                    *, discipline, rule, sample, early_pruning, cap,
+                    use_pallas, interpret):
+    """One whole admission decision over a sampling main, on device.
+
+    Mirror scatter -> fused CMS flush + candidate estimate -> counter-RNG
+    sample walk (``lax.while_loop``; each step gathers and scores only its
+    drawn pool) with the per-discipline stop rule -> verdict. Returns
+    ``(table, mkeys, msizes, admit, victims, n_evict, examined,
+    fallbacks)``; ``victims[:n_evict]`` are decision-time slots.
+    """
+    slots = mkeys.shape[0]
+    mkeys = mkeys.at[wr_slots].set(wr_keys, mode="drop")
+    msizes = msizes.at[wr_slots].set(wr_sizes, mode="drop")
+    cand = jnp.asarray(cand_key, jnp.int32).reshape(1)
+    table, est = flush_scores(table, upd_keys, n_pend, cand,
+                              cap=cap, use_pallas=use_pallas, interpret=interpret)
+    # vcap = slots: the per-decision victim buffer covers the whole mirror,
+    # so the overflow flag is statically unreachable here.
+    admit, victims, n_evict, examined, fallbacks, _ = _sampled_walk(
+        table, mkeys, msizes, n, est[0], needed, base_hi, base_lo,
+        discipline=discipline, rule=rule, sample=sample,
+        early_pruning=early_pruning, vcap=slots)
     return table, mkeys, msizes, admit, victims, n_evict, examined, fallbacks
 
 
@@ -332,8 +354,8 @@ def _decide_prefix(table, vkeys, vsizes, m, upd_keys, n_pend, cand_key, needed,
     length = vkeys.shape[0]
     cand = jnp.asarray(cand_key, jnp.int32).reshape(1)
     est_keys = jnp.concatenate([cand, vkeys])
-    table, est = _flush_scores(table, upd_keys, n_pend, est_keys,
-                               cap=cap, use_pallas=use_pallas, interpret=interpret)
+    table, est = flush_scores(table, upd_keys, n_pend, est_keys,
+                              cap=cap, use_pallas=use_pallas, interpret=interpret)
     cand_f = est[0]
     vf = est[1:]
     valid = jnp.arange(length, dtype=jnp.int32) < m
@@ -366,6 +388,148 @@ def _decide_prefix(table, vkeys, vsizes, m, upd_keys, n_pend, cand_key, needed,
     return table, admit, n_evict, g, examined, has_loser
 
 
+# -- decision-batched kernel (speculative window-cascade unrolling) ----------
+
+_GAMMA_HI = jnp.uint32(crng.GAMMA >> 32)
+_GAMMA_LO = jnp.uint32(crng.GAMMA & 0xFFFFFFFF)
+
+
+def _apply_verdict(mkeys, msizes, n, used, victims, n_evict, admit, cand, size, vcap):
+    """Replay one decision's verdict onto the in-scan mirror state: the
+    host's swap-remove evictions (in selection order, with the back-fill
+    slot remap the host's ``pos`` dict performs implicitly) followed by the
+    candidate insert on an admit. This is what lets decision ``d+1``'s
+    draws see exactly the slot layout the host will have after applying
+    decision ``d`` — the speculation that makes chunking sound."""
+    drop = jnp.int32(mkeys.shape[0])  # OOB sentinel: scatter lanes dropped
+
+    def evict_one(j, st):
+        mkeys, msizes, n, used, victims = st
+        act = j < n_evict
+        s = victims[j]
+        last = n - 1
+        lk = mkeys[last]
+        ls = msizes[last]
+        vsz = msizes[s]
+        tgt = jnp.where(act, s, drop)
+        mkeys = mkeys.at[tgt].set(lk, mode="drop")
+        msizes = msizes.at[tgt].set(ls, mode="drop")
+        used = used - jnp.where(act, vsz, 0)
+        n = n - act.astype(n.dtype)
+        # a later victim recorded at the (old) last slot now lives at s
+        pos = jnp.arange(vcap, dtype=jnp.int32)
+        victims = jnp.where(act & (pos > j) & (victims == last), s, victims)
+        return mkeys, msizes, n, used, victims
+
+    mkeys, msizes, n, used, victims = jax.lax.fori_loop(
+        0, vcap, evict_one, (mkeys, msizes, n, used, victims))
+    tgt = jnp.where(admit, n, drop)
+    mkeys = mkeys.at[tgt].set(cand, mode="drop")
+    msizes = msizes.at[tgt].set(size, mode="drop")
+    used = used + jnp.where(admit, size, 0)
+    n = n + admit.astype(n.dtype)
+    return mkeys, msizes, n, used
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("discipline", "rule", "sample", "early_pruning", "cap",
+                     "use_pallas", "interpret", "vcap"),
+)
+def _decide_sampled_chunk(table, mkeys, msizes, wr, upd, meta, scal, key_limbs,
+                          *, discipline, rule, sample, early_pruning, cap,
+                          use_pallas, interpret, vcap):
+    """A whole CHUNK of admission decisions over a sampling main, as ONE
+    jitted call: ``lax.scan`` speculatively unrolls the window->main
+    admission cascade, each decision's verdict feeding the next through
+    masked in-scan mirror updates.
+
+    Per scanned decision: apply its pending-increment *segment* (the
+    accesses between it and the previous decision) through the fused
+    flush+score step, replay the free-space check (``needed <= 0`` admits
+    without a decision — no counter bump, no draws), otherwise advance the
+    decision counter (a 64-bit limb add of GAMMA to the unmixed stream
+    key — bit-identical to ``begin_decision`` + ``crng.stream_key``), run
+    the shared sample walk, and replay the verdict onto the in-scan
+    key/size mirror so the next decision draws against post-verdict state.
+
+    Speculation depth: a decision selecting more than ``vcap`` victims
+    cannot be applied in-scan; it and every later decision in the chunk
+    report ``ok=False`` (the *poisoned* suffix — its own segment flush has
+    already landed, its mirror/counter effects have not), and the host
+    resyncs it through the per-decision plane.
+
+    Arguments are packed to minimize per-launch host->device transfers
+    (dispatch amortization is the whole point): ``wr`` is the mirror's
+    ``[3, PAD]`` dirty-scatter block (slots/keys/sizes rows), ``upd`` the
+    ``[B, P]`` increment segments, ``meta`` ``[B, 4]`` int32 rows of
+    ``(cand_key, cand_size, n_pend, valid)``, ``scal`` ``[3]`` int32
+    ``(n, used, main_cap)`` and ``key_limbs`` ``[2]`` uint32 — the unmixed
+    decision-stream key. Returns ``(table, mkeys, msizes, out, victims)``
+    where ``out`` is ``[B, 6]`` int32 rows of ``(ok, admit, free_insert,
+    n_evict, examined, fallbacks)`` and ``victims`` ``[B, vcap]``
+    decision-time slots (the host resolves them against its own state
+    while applying the verdict vector in one pass).
+    """
+    mkeys = mkeys.at[wr[0]].set(wr[1], mode="drop")
+    msizes = msizes.at[wr[0]].set(wr[2], mode="drop")
+    n, used, main_cap = scal[0], scal[1], scal[2]
+    key_hi, key_lo = key_limbs[0], key_limbs[1]
+    z = jnp.int32(0)
+
+    def step(carry, x):
+        table, mkeys, msizes, n, used, khi, klo, poisoned = carry
+        meta_row, upd_row = x
+        cand, size, np_row = meta_row[0], meta_row[1], meta_row[2]
+        v = meta_row[3] > z
+        run = v & ~poisoned
+        table, est = flush_scores(
+            table, upd_row, jnp.where(run, np_row, 0), cand.reshape(1),
+            cap=cap, use_pallas=use_pallas, interpret=interpret)
+        cand_f = est[0]
+        needed = size - (main_cap - used)
+        is_free = needed <= z
+        walk = run & ~is_free
+
+        # begin_decision: bump the unmixed stream key by GAMMA (64-bit limb
+        # add; mix13 of the bumped key == crng.stream_key(seed, decision+1))
+        nlo = klo + _GAMMA_LO
+        nhi = khi + _GAMMA_HI + (nlo < klo).astype(jnp.uint32)
+        khi = jnp.where(walk, nhi, khi)
+        klo = jnp.where(walk, nlo, klo)
+        base_hi, base_lo = _mix64_u32(khi, klo)
+
+        def do_walk(_):
+            return _sampled_walk(
+                table, mkeys, msizes, n, cand_f, needed, base_hi, base_lo,
+                discipline=discipline, rule=rule, sample=sample,
+                early_pruning=early_pruning, vcap=vcap)
+
+        def no_walk(_):
+            return (jnp.bool_(False), jnp.full(vcap, -1, jnp.int32), z, z, z,
+                    jnp.bool_(False))
+
+        admit_w, victims, n_evict, examined, fallbacks, overflow = jax.lax.cond(
+            walk, do_walk, no_walk, None)
+
+        ok = run & ~overflow
+        admit = jnp.where(is_free, run, admit_w & ok)
+        app_evict = jnp.where(ok, n_evict, z)  # QV evictions stick on reject
+        mkeys, msizes, n, used = _apply_verdict(
+            mkeys, msizes, n, used, victims, app_evict, admit & ok,
+            cand, size, vcap)
+        poisoned = poisoned | (run & overflow)
+        out_row = jnp.stack([ok.astype(jnp.int32), admit.astype(jnp.int32),
+                             (is_free & run).astype(jnp.int32), n_evict,
+                             examined, fallbacks])
+        return (table, mkeys, msizes, n, used, khi, klo, poisoned), (out_row, victims)
+
+    init = (table, mkeys, msizes, n, used, key_hi, key_lo, jnp.bool_(False))
+    (table, mkeys, msizes, n, used, khi, klo, poisoned), (out, victims) = jax.lax.scan(
+        step, init, (meta, upd))
+    return table, mkeys, msizes, out, victims
+
+
 # -- host-side plane ---------------------------------------------------------
 
 class DeviceMirror:
@@ -390,7 +554,58 @@ class DeviceMirror:
         self.max_size = int(max_size)
         self._dirty: set[int] = set()
         self._dev: "tuple | None" = None
+        self._applied = False  # writes already landed on device (chunk apply)
         self.uploads = 0  # full re-uploads (observability for tests)
+
+    def ensure_capacity(self, slots: int) -> bool:
+        """Grow the slot table to hold at least ``slots`` entries; returns
+        True when it grew (shape change: full upload next decision). The
+        decision-batched plane calls this pre-flight so an in-scan insert
+        can never land past the device arrays mid-chunk."""
+        if slots <= self._cap:
+            return False
+        grow = self._cap
+        while slots > grow:
+            grow <<= 1
+        keys = np.zeros(grow, np.int64)
+        sizes = np.zeros(grow, np.int64)
+        keys[: self._cap] = self._keys
+        sizes[: self._cap] = self._sizes
+        self._keys, self._sizes, self._cap = keys, sizes, grow
+        self._dev = None
+        return True
+
+    def load(self, keys, sizes_by_key) -> None:
+        """Bulk (re)load of the whole slot table — the batched twin of
+        per-slot :meth:`record` used by ``SampledEviction.attach_mirror``
+        when the policy already holds entries: one vectorized fill + one
+        full upload instead of len(keys) dirty-slot records."""
+        n = len(keys)
+        self.ensure_capacity(n)
+        if n:
+            arr = np.fromiter((k & 0xFFFFFFFF for k in keys), np.int64, n)
+            szs = np.fromiter((sizes_by_key[k] for k in keys), np.int64, n)
+            if szs.max(initial=0) > self.max_size:
+                raise ValueError(
+                    f"device admission plane: object size {int(szs.max())} "
+                    f"exceeds the exact-arithmetic bound {self.max_size}"
+                )
+            self._keys[:n] = arr
+            self._sizes[:n] = szs
+        self._dirty.clear()
+        self._dev = None  # full upload next decision
+
+    def begin_applied(self) -> None:
+        """Enter chunk-apply mode: the decision kernel has already applied
+        the upcoming writes to the device arrays in-scan (the host apply
+        pass replays the same evict/insert sequence), so :meth:`record`
+        keeps the host copy authoritative but skips dirty-marking —
+        re-scattering identical values per decision would blow the scatter
+        budget and force a full re-upload every chunk."""
+        self._applied = True
+
+    def end_applied(self) -> None:
+        self._applied = False
 
     def record(self, slot: int, key: int, size: int) -> None:
         if size > self.max_size:
@@ -399,21 +614,15 @@ class DeviceMirror:
                 f"exact-arithmetic bound {self.max_size}"
             )
         if slot >= self._cap:
-            grow = self._cap
-            while slot >= grow:
-                grow <<= 1
-            keys = np.zeros(grow, np.int64)
-            sizes = np.zeros(grow, np.int64)
-            keys[: self._cap] = self._keys
-            sizes[: self._cap] = self._sizes
-            self._keys, self._sizes, self._cap = keys, sizes, grow
-            self._dev = None  # shape change: full upload next decision
+            self.ensure_capacity(slot + 1)
         self._keys[slot] = key & 0xFFFFFFFF
         self._sizes[slot] = size
-        self._dirty.add(slot)
+        if not self._applied:
+            self._dirty.add(slot)
 
-    def device_state(self):
-        """``(keys, sizes, wr_slots, wr_keys, wr_sizes)`` for one decision."""
+    def _sync(self):
+        """Resident arrays + the ``[3, _WRITE_PAD]`` dirty-scatter block
+        (slots/keys/sizes rows; pad slots point past the arrays and drop)."""
         if self._dev is None or len(self._dirty) > _WRITE_PAD:
             self._dev = (
                 jnp.asarray(self._keys.astype(np.int32)),
@@ -421,16 +630,26 @@ class DeviceMirror:
             )
             self._dirty.clear()
             self.uploads += 1
-        wr_slots = np.full(_WRITE_PAD, self._cap, np.int32)  # pad: dropped
-        wr_keys = np.zeros(_WRITE_PAD, np.int32)
-        wr_sizes = np.zeros(_WRITE_PAD, np.int32)
+        wr = np.zeros((3, _WRITE_PAD), np.int32)
+        wr[0] = self._cap  # pad: dropped
         for j, slot in enumerate(self._dirty):
-            wr_slots[j] = slot
-            wr_keys[j] = self._keys[slot].astype(np.int32)
-            wr_sizes[j] = self._sizes[slot]
+            wr[0, j] = slot
+            wr[1, j] = self._keys[slot].astype(np.int32)
+            wr[2, j] = self._sizes[slot]
         self._dirty.clear()
         dk, ds = self._dev
-        return dk, ds, jnp.asarray(wr_slots), jnp.asarray(wr_keys), jnp.asarray(wr_sizes)
+        return dk, ds, wr
+
+    def device_state(self):
+        """``(keys, sizes, wr_slots, wr_keys, wr_sizes)`` for one decision."""
+        dk, ds, wr = self._sync()
+        return dk, ds, jnp.asarray(wr[0]), jnp.asarray(wr[1]), jnp.asarray(wr[2])
+
+    def device_state_packed(self):
+        """``(keys, sizes, wr[3, PAD])`` — the decision-chunk kernel's
+        one-upload form of :meth:`device_state`."""
+        dk, ds, wr = self._sync()
+        return dk, ds, jnp.asarray(wr)
 
     def accept(self, dev_keys, dev_sizes) -> None:
         """Adopt the kernel's post-scatter arrays as the resident copy."""
@@ -588,3 +807,334 @@ class DeviceAdmissionPlane:
             return True
         stats.rejections += 1
         return False
+
+
+class DeviceBatchedAdmissionPlane:
+    """``data_plane="device_batched"``: amortize kernel dispatch over a
+    CHUNK of admission decisions.
+
+    The per-decision :class:`DeviceAdmissionPlane` (PR 4) proved the
+    closed-loop semantics but launches one jitted call per decision, so
+    dispatch — not the kernel — dominates throughput. This plane drives a
+    whole access chunk on the host (hit/miss bookkeeping, the Alg. 1 window
+    cascade), *defers* the main-cache admission decisions it generates into
+    a buffer, and resolves the buffer with ONE
+    :func:`_decide_sampled_chunk` launch that speculatively unrolls the
+    cascade in a ``lax.scan`` — per-decision pending-increment segments,
+    the free-space check, decision-counter advance, sample walk, and
+    verdict application to the in-scan mirror all on device. The host then
+    applies the verdict vector in one pass.
+
+    Deferring is only sound while no interleaved access can observe a
+    pending verdict, so the drive loop **flushes** the buffer before:
+
+    * an access that hits the host-view Main (a pending decision might
+      have evicted that key) or touches a pending candidate key (its
+      hit/miss status IS the pending verdict);
+    * ``_maybe_adapt`` under the adaptive window (it drains against live
+      Main state);
+    * the end of every ``access_batch`` call (engine snapshots must read
+      exact stats — see ``SimulationEngine``'s chunk-splitting contract).
+
+    Window hits never flush: pending decisions cannot touch the Window.
+
+    Speculation limits resync through the per-decision plane (counted in
+    ``resyncs`` / ``resync_reasons``, byte-identity preserved):
+
+    * ``aging``  — the chunk's increments would cross the sketch's reset
+      boundary (the per-decision path stages the boundary-splitting
+      ``flush()`` exactly like the other planes);
+    * ``flush_block`` — a single decision's segment outgrew the fused-
+      flush memory budget;
+    * ``victim_cap`` — a decision selected more than ``victim_cap``
+      victims, poisoning the chunk suffix in-kernel;
+    * ``mirror_grow`` — the chunk's worst-case inserts would overflow the
+      device mirror, forcing a grow + full re-upload pre-flight.
+
+    Deterministic-order mains (LRU/SLRU) keep their covering-prefix walk
+    in host order dicts, so every decision resolves immediately through
+    the per-decision prefix kernel — same spec surface, batching engages
+    on the mirror-slot (sampled/random) mains.
+    """
+
+    def __init__(self, device: DeviceAdmissionPlane, *, chunk: int = 64,
+                 victim_cap: int = 16):
+        if chunk < 1:
+            raise ValueError("device_batched chunk must be >= 1")
+        self.device = device
+        self.sketch = device.sketch
+        self.main = device.main
+        self.mirror = device.mirror
+        self.sampled = device.sampled
+        self.chunk = int(chunk)
+        #: Static per-decision victim budget of the scan kernel; decisions
+        #: needing more resync through the per-decision plane.
+        self.victim_cap = int(victim_cap)
+        self.chunk_calls = 0  # chunk-kernel launches
+        self.decisions = 0  # decisions resolved through this plane
+        self.batched_decisions = 0  # ... resolved inside a chunk kernel
+        self.flushes = 0  # buffer flushes (any size, incl. size-1)
+        self.resyncs = 0  # host-resync fallbacks, by reason below
+        self.resync_reasons = {"aging": 0, "flush_block": 0,
+                               "victim_cap": 0, "mirror_grow": 0}
+        self._queue: list[tuple[int, int, int]] = []  # (key, size, boundary)
+        self._pending_keys: set[int] = set()
+
+    # -- the chunked drive loop -------------------------------------------
+    def drive_chunk(self, pol, keys, sizes) -> np.ndarray:
+        """Drive one access chunk for ``pol`` (the owning
+        ``SizeAwareWTinyLFU``) — observationally identical to its scalar
+        ``access`` loop, with admission decisions batched per launch."""
+        n = len(keys)
+        hits = np.empty(n, dtype=bool)
+        keys = keys.tolist() if hasattr(keys, "tolist") else list(keys)
+        sizes = sizes.tolist() if hasattr(sizes, "tolist") else list(sizes)
+        st = pol.stats
+        window = pol.window
+        main = self.main
+        increment = self.sketch.increment
+        adaptive = pol.adaptive_window
+        pending_keys = self._pending_keys
+        for i in range(n):
+            key = keys[i]
+            size = sizes[i]
+            st.accesses += 1
+            st.bytes_requested += size
+            increment(key)
+            if key in window:
+                window.move_to_end(key)
+                st.hits += 1
+                st.bytes_hit += size
+                hits[i] = True
+                continue
+            if pending_keys and (key in pending_keys or key in main):
+                # a pending verdict could flip this access's hit/miss
+                # status (victim eviction / candidate admission): resolve
+                # the buffer, then re-read Main
+                self._flush(pol)
+            if key in main:
+                main.on_access(key)
+                st.hits += 1
+                st.bytes_hit += size
+                hits[i] = True
+                continue
+            hits[i] = False
+            self._on_miss(pol, key, size)
+            if adaptive:
+                self._flush(pol)
+                pol._maybe_adapt()
+        self._flush(pol)  # access_batch returns with exact stats
+        return hits
+
+    def _on_miss(self, pol, key: int, size: int) -> None:
+        """Alg. 1 miss cascade, decisions deferred into the buffer."""
+        if size > pol.capacity:  # line 2: can never fit
+            pol.stats.rejections += 1
+            return
+        if size > pol.window_cap:
+            # line 6: too large for the Window -> direct Main candidate
+            self._enqueue(pol, key, size)
+            return
+        window = pol.window
+        window[key] = size
+        pol.window_bytes += size
+        while pol.window_bytes > pol.window_cap:  # lines 9-11
+            vk, vs = window.popitem(last=False)
+            pol.window_bytes -= vs
+            self._enqueue(pol, vk, vs)
+
+    def _enqueue(self, pol, key: int, size: int) -> None:
+        st = pol.stats
+        if size > pol.main_cap:
+            st.rejections += 1
+            return
+        sk = self.sketch
+        if (not self.sampled or pol.main_cap > _I32_MAX
+                or size > self.device.max_size):
+            # prefix mains (and shapes past the kernel's int32 bounds)
+            # resolve per decision through the covering-prefix kernel
+            self._flush(pol)
+            self._execute_now(pol, key, size)
+            return
+        boundary = len(sk._pending)
+        prev = self._queue[-1][2] if self._queue else 0
+        if boundary - prev > sk.flush_block or sk._ops + boundary >= sk.sample_size:
+            # speculation depth exceeded: an aging reset lands inside the
+            # chunk (or one segment outgrew the fused-flush budget) —
+            # resync through the per-decision plane, whose staged
+            # ``sketch.flush()`` splits at the reset boundary exactly like
+            # the host planes (ops + boundary == the scalar plane's
+            # ops + npend at this decision, so the trigger point matches)
+            self._flush(pol)
+            self.resyncs += 1
+            self.resync_reasons[
+                "flush_block" if boundary - prev > sk.flush_block else "aging"
+            ] += 1
+            self._execute_now(pol, key, size)
+            return
+        self._queue.append((key, size, boundary))
+        self._pending_keys.add(key)
+        if len(self._queue) >= self.chunk:
+            self._flush(pol)
+
+    def _execute_now(self, pol, key: int, size: int) -> None:
+        """One decision through the per-decision plane — the host-resync
+        path, byte-identical to ``SizeAwareWTinyLFU._evict_or_admit``."""
+        main = self.main
+        st = pol.stats
+        free = pol.main_cap - main.used
+        if free >= size:
+            main.insert(key, size)
+            st.admissions += 1
+        else:
+            main.begin_decision()
+            self.device.decide(key, size, size - free, main, st)
+        self.decisions += 1
+
+    # -- buffer resolution -------------------------------------------------
+    def _flush(self, pol) -> None:
+        """Resolve every buffered decision: one chunk-kernel launch per
+        iteration, applying the ok-prefix and resyncing a poisoned
+        (victim-cap overflow) decision through the per-decision plane."""
+        if not self._queue:
+            return
+        self._pending_keys.clear()
+        self.flushes += 1
+        while self._queue:
+            q = self._queue
+            self._queue = []
+            if self.sampled:
+                n0 = len(self.main.keys)
+                if n0 + len(q) >= MAX_MIRROR_ENTRIES:
+                    raise ValueError(
+                        f"device plane supports < {MAX_MIRROR_ENTRIES} "
+                        f"entries, got {n0} (+{len(q)} queued)"
+                    )
+                if self.mirror.ensure_capacity(n0 + len(q)):
+                    # mirror overflow mid-chunk: worst case every queued
+                    # decision admits — grow + full upload pre-flight so no
+                    # in-scan (or applied) insert can land past the arrays
+                    self.resyncs += 1
+                    self.resync_reasons["mirror_grow"] += 1
+            if len(q) == 1:
+                # a batch of one: the per-decision kernel is the cheaper
+                # launch (no scan machinery), byte-identical by definition.
+                # Hide the post-decision increment tail so its estimates
+                # see exactly the decision-time sketch state.
+                key, size, b = q[0]
+                sk = self.sketch
+                saved = sk._pending[b:]
+                sk._pending = sk._pending[:b]
+                self._execute_now(pol, key, size)
+                sk._pending = sk._pending + saved
+                return
+            okn, poisoned = self._launch(pol, q)
+            if okn == len(q):
+                return
+            # q[okn] overflowed victim_cap: its segment flush already
+            # landed in-kernel, so hide the post-decision increment tail,
+            # redo it per-decision, then re-buffer the untouched suffix
+            # (boundaries rebased onto the restored pending list).
+            key, size, b = q[okn]
+            sk = self.sketch
+            saved = sk._pending
+            sk._pending = []
+            self.resyncs += 1
+            self.resync_reasons["victim_cap"] += 1
+            self._execute_now(pol, key, size)
+            sk._pending = saved
+            self._queue = [(k, s, bb - b) for k, s, bb in q[okn + 1:]]
+
+    def _launch(self, pol, q) -> tuple[int, bool]:
+        """One `_decide_sampled_chunk` launch over ``q``; applies the
+        ok-prefix to the host structures. Returns (ok_count, poisoned)."""
+        sk = self.sketch
+        main = self.main
+        dev = self.device
+        n0 = len(main.keys)
+        nq = len(q)
+        b_last = q[-1][2]
+        pend = sk._pending
+        # B pads the queue to a power of two (scan steps are real work even
+        # when masked, so the scan length tracks the actual batch); P pads
+        # the widest segment to a coarse bucket — both keep the jit cache
+        # small (log-many variants) across launches.
+        B = _next_pow2(nq)
+        max_seg = 0
+        prevb = 0
+        for _, _, b in q:
+            max_seg = max(max_seg, b - prevb)
+            prevb = b
+        P = 16
+        while P < max_seg:
+            P <<= 3  # buckets 16, 128, 1024 (<= flush_block guard)
+        upd = np.zeros((B, P), np.int32)
+        meta = np.zeros((B, 4), np.int32)  # cand, size, n_pend, valid
+        prevb = 0
+        for i, (k, s, b) in enumerate(q):
+            seg = pend[prevb:b]
+            prevb = b
+            if seg:
+                meta[i, 2] = len(seg)
+                upd[i, : len(seg)] = np.asarray(seg, np.int64).astype(np.int32)
+            meta[i, 0] = _key32(k)
+            meta[i, 1] = s
+            meta[i, 3] = 1
+        # unmixed stream key of the CURRENT counter; each in-scan decision
+        # bumps by GAMMA before mixing, replaying begin_decision exactly
+        key0 = (main.seed * crng.GOLDEN + main.decision * crng.GAMMA) & ((1 << 64) - 1)
+        scal = np.asarray([n0, main.used, pol.main_cap], np.int32)
+        key_limbs = np.asarray([key0 >> 32, key0 & 0xFFFFFFFF], np.uint32)
+        mkeys, msizes, wr = self.mirror.device_state_packed()
+        table, mkeys, msizes, out, victims = _decide_sampled_chunk(
+            sk.table, mkeys, msizes, wr, jnp.asarray(upd), jnp.asarray(meta),
+            jnp.asarray(scal), jnp.asarray(key_limbs),
+            discipline=dev.discipline, rule=main.rule, sample=main.SAMPLE,
+            early_pruning=dev.early_pruning, cap=sk.cap,
+            use_pallas=sk.use_pallas, interpret=dev._interpret,
+            vcap=self.victim_cap)
+        self.chunk_calls += 1
+        out = np.asarray(out)  # [B, 6]: ok, admit, free, n_evict, examined, fallbacks
+        ok = out[:, 0]
+        okn = 0
+        while okn < nq and ok[okn]:
+            okn += 1
+        # commit the sketch through the last in-kernel-flushed segment: the
+        # ok-prefix plus, when poisoned, the overflowing decision's own
+        applied_b = q[okn][2] if okn < nq else b_last
+        sk.table = table
+        sk._ops += applied_b
+        sk._pending = pend[applied_b:]
+        # adopt the post-scan mirror arrays, then replay the verdict vector
+        # on the host structures with dirty-marking suppressed (the scan
+        # already performed these exact slot writes)
+        self.mirror.accept(mkeys, msizes)
+        victims = np.asarray(victims)
+        st = pol.stats
+        self.mirror.begin_applied()
+        try:
+            for i in range(okn):
+                key, size, _ = q[i]
+                _, admit, free_ins, n_evict, examined, fallbacks = out[i]
+                st.victims_examined += int(examined)
+                main.fallback_scans += int(fallbacks)
+                if free_ins:
+                    main.insert(key, size)
+                    st.admissions += 1
+                else:
+                    main.begin_decision()
+                    evict_keys = [main.keys[int(sl)]
+                                  for sl in victims[i][: int(n_evict)]]
+                    for v in evict_keys:
+                        main.evict(v)
+                        st.evictions += 1
+                    if admit:
+                        main.insert(key, size)
+                        st.admissions += 1
+                    else:
+                        st.rejections += 1
+                self.decisions += 1
+                self.batched_decisions += 1
+        finally:
+            self.mirror.end_applied()
+        return okn, okn < nq

@@ -22,6 +22,8 @@ __all__ = [
     "update",
     "estimate",
     "update_estimate",
+    "update_estimate_segments",
+    "flush_scores",
     "reset",
     "counter_draws",
     "DeviceSketch",
@@ -134,6 +136,61 @@ def estimate(table, keys, *, use_pallas: bool = True):
                                    interpret=jax.default_backend() != "tpu")
         return vals.min(0)
     return cms_estimate_ref(table, keys)
+
+
+def flush_scores(table, upd_keys, n_pend, est_keys, *, cap, use_pallas, interpret):
+    """Apply the first ``n_pend`` pending increments of ``upd_keys`` (a
+    padded int32 batch), then estimate ``est_keys`` on the updated table —
+    the fused flush+score step shared by every device decision kernel.
+
+    With ``use_pallas`` this IS the fused ``cms_update_estimate`` Pallas
+    launch; otherwise a scatter-add + gather with identical values (the
+    same saturating non-conservative semantics as ``cms_update_ref``).
+    Padded update lanes are masked to the out-of-range ``width`` sentinel,
+    which no width block ever matches. Traceable (``n_pend`` may be
+    dynamic), so it composes into ``lax.scan`` decision chunks.
+    """
+    width = table.shape[1]
+    upd_idx = row_indexes(upd_keys, width)
+    upd_idx = jnp.where(jnp.arange(upd_keys.shape[0])[None, :] < n_pend, upd_idx, width)
+    est_idx = row_indexes(est_keys, width)
+    if use_pallas:
+        new_table, vals = cms_update_estimate_pallas(
+            table, upd_idx, est_idx, cap=cap, interpret=interpret)
+        return new_table, vals.min(0)
+    rows = table.shape[0]
+    counts = jnp.zeros_like(table).at[
+        jnp.arange(rows, dtype=jnp.int32)[:, None], upd_idx
+    ].add(1, mode="drop")
+    new_table = jnp.minimum(table + counts, cap)
+    vals = jnp.take_along_axis(new_table, est_idx, axis=1)
+    return new_table, vals.min(0)
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "use_pallas"))
+def update_estimate_segments(table, upd, n_pend, est, *, cap: int = 15,
+                             use_pallas: bool = True):
+    """Fused flush + score over B per-decision increment *segments* in ONE
+    dispatch: for each decision ``d``, apply ``upd[d, :n_pend[d]]`` to the
+    running table, then estimate ``est[d]`` against the just-updated table.
+
+    ``upd`` is ``[B, P]`` int32 (padded), ``n_pend`` ``[B]``, ``est``
+    ``[B, K]``. Returns ``(final_table, vals[B, K])``. Segment granularity
+    is exactness-preserving (saturating non-conservative increments
+    commute, and ``min(min(t+c1, cap)+c2, cap) == min(t+c1+c2, cap)``), so
+    estimates observe precisely the increments that precede their decision
+    in access order — the decision-batched admission plane's sketch
+    primitive, also used standalone by tests and benchmarks.
+    """
+    interpret = jax.default_backend() != "tpu"  # like the sibling ops
+
+    def step(tab, x):
+        u, n, e = x
+        tab, vals = flush_scores(tab, u, n, e, cap=cap,
+                                 use_pallas=use_pallas, interpret=interpret)
+        return tab, vals
+
+    return jax.lax.scan(step, table, (upd, n_pend, est))
 
 
 @functools.partial(jax.jit, static_argnames=("cap", "use_pallas"))

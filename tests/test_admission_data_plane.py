@@ -334,7 +334,10 @@ class TestDevicePlane:
     def test_one_jitted_call_per_decision(self, eviction):
         """Acceptance: at most one jitted device call per admission
         decision — and with no aging reset due, exactly one (zero staged
-        flushes), for both the mirror walk and the prefix kernel."""
+        flushes), for both the mirror walk and the prefix kernel. Scalar
+        drive pins the per-decision contract (under ``access_batch`` the
+        device plane auto-upgrades to decision batching — see
+        ``TestDeviceBatchedPlane``)."""
         tr = make_trace("msr2", seed=9, scale=0.0008)
         cap = max(1, int(tr.total_object_bytes * 0.02))
         p = SizeAwareWTinyLFU(
@@ -350,7 +353,7 @@ class TestDevicePlane:
             return orig_admit(*args)
 
         p._admit = spy_admit
-        SimulationEngine().run(p, tr)
+        SimulationEngine(use_batch=False).run(p, tr)
         plane = p.admission_policy._device
         assert counts["decisions"] > 20, "trace too small to be meaningful"
         assert plane.calls == counts["decisions"]
@@ -364,7 +367,7 @@ class TestDevicePlane:
         cap = max(1, int(tr.total_object_bytes * 0.02))
         p = SizeAwareWTinyLFU(cap, data_plane="device", expected_entries=16,
                               eviction="sampled_frequency")
-        SimulationEngine().run(p, tr)
+        SimulationEngine(use_batch=False).run(p, tr)
         plane = p.admission_policy._device
         assert p.sketch.resets > 0, "sketch never aged; shrink expected_entries"
         assert plane.staged_flushes > 0
@@ -380,7 +383,7 @@ class TestDevicePlane:
         p = SizeAwareWTinyLFU(cap, admission="qv", eviction="sampled_size",
                               data_plane="device",
                               expected_entries=max(64, int(cap / tr.mean_object_size)))
-        SimulationEngine().run(p, tr)
+        SimulationEngine(use_batch=False).run(p, tr)
         plane = p.admission_policy._device
         assert plane.calls > 20
         n = len(p.main.keys)
@@ -410,6 +413,256 @@ class TestDevicePlane:
         (a, ha), (b, hb), (c, hc) = out
         _assert_byte_identical(a, b, ha, hb, f"{spec} scalar-vs-batched")
         _assert_byte_identical(a, c, ha, hc, f"{spec} scalar-vs-device")
+
+
+def _drive_batched(p, keys, sizes, step=37):
+    """Drive via access_batch in uneven chunks (exercises buffer flushes
+    landing mid-chunk and at chunk boundaries)."""
+    hits = []
+    ka = np.asarray(keys, dtype=np.int64)
+    sa = np.asarray(sizes, dtype=np.int64)
+    for lo in range(0, len(ka), step):
+        hits.extend(p.access_batch(ka[lo : lo + step], sa[lo : lo + step]).tolist())
+    return hits
+
+
+def _assert_mirror_synced(p, label=""):
+    """The device key/size twin must match the eviction policy's slot table
+    byte-for-byte: host copy AND the device-resident arrays overlaid with
+    the not-yet-scattered dirty slots."""
+    mirror = p.admission_policy._device.mirror
+    main = p.main
+    n = len(main.keys)
+    want_keys = [k & 0xFFFFFFFF for k in main.keys]
+    want_sizes = [main.sizes[k] for k in main.keys]
+    assert mirror._keys[:n].tolist() == want_keys, f"{label}: host mirror keys"
+    assert mirror._sizes[:n].tolist() == want_sizes, f"{label}: host mirror sizes"
+    if mirror._dev is not None:
+        dev_keys = np.asarray(mirror._dev[0]).astype(np.int64) & 0xFFFFFFFF
+        dev_sizes = np.asarray(mirror._dev[1]).astype(np.int64)
+        for slot in mirror._dirty:  # pending scatter: next decision's writes
+            dev_keys[slot] = mirror._keys[slot]
+            dev_sizes[slot] = mirror._sizes[slot]
+        assert dev_keys[:n].tolist() == want_keys, f"{label}: device mirror keys"
+        assert dev_sizes[:n].tolist() == want_sizes, f"{label}: device mirror sizes"
+
+
+class TestDeviceBatchedPlane:
+    """ISSUE 5: the decision-batched device pipeline (speculative
+    window-cascade unrolling — chunks of admission decisions per launch)."""
+
+    def _trace(self, seed=5, scale=0.0015):
+        tr = make_trace("msr2", seed=seed, scale=scale)
+        cap = max(1, int(tr.total_object_bytes * 0.02))
+        return tr, cap, max(64, int(cap / tr.mean_object_size))
+
+    def test_plane_resolution_and_spec_round_trip(self):
+        from repro.core import PolicySpec
+
+        spec = PolicySpec.parse(
+            "wtlfu-qv-sampled_frequency?data_plane=device_batched&chunk=16&seed=0xA11CE")
+        assert PolicySpec.parse(spec.to_string()) == spec
+        p = REGISTRY.build(spec, 10_000, expected_entries=64)
+        assert p.data_plane == "device_batched"
+        assert p.sketch_backend == "cms"  # implied, like data_plane=device
+        assert p.admission_policy._device_batch.chunk == 16
+        assert p.main.seed == 0xA11CE
+        with pytest.raises(ValueError, match="cms"):
+            SizeAwareWTinyLFU(10_000, expected_entries=64,
+                              data_plane="device_batched", sketch_backend="host")
+        with pytest.raises(ValueError, match="chunk"):
+            SizeAwareWTinyLFU(10_000, expected_entries=64,
+                              data_plane="device_batched", chunk=0)
+
+    def test_decisions_batched_per_launch(self):
+        """Acceptance: the chunk kernel amortizes dispatch — decisions
+        resolve in strictly fewer launches than the per-decision plane
+        would take, with the bulk of them resolved inside chunk kernels."""
+        tr, cap, ee = self._trace()
+        p = SizeAwareWTinyLFU(cap, admission="qv", eviction="sampled_frequency",
+                              data_plane="device_batched", expected_entries=ee,
+                              chunk=16)
+        SimulationEngine().run(p, tr)
+        pipe = p.admission_policy._device_batch
+        dev = p.admission_policy._device
+        assert pipe.decisions > 100, "trace too small to be meaningful"
+        launches = pipe.chunk_calls + dev.calls
+        assert launches < pipe.decisions / 2, (
+            f"{launches} launches for {pipe.decisions} decisions: batching "
+            "is not amortizing dispatch")
+        assert pipe.batched_decisions > pipe.decisions / 2
+
+    def test_scalar_access_resolves_per_decision(self):
+        """Scalar ``access()`` on device_batched (admit_device_batch — also
+        the adaptive-window drain path) resolves each decision through the
+        per-decision kernel, byte-identical to the scalar plane, without
+        engaging the chunk pipeline."""
+        rng = np.random.default_rng(17)
+        keys = ((rng.zipf(1.25, size=400) - 1) % 35).astype(np.int64).tolist()
+        sizes = [10 + (k * 11) % 80 for k in keys]
+        spec = "wtlfu-av-sampled_frequency?sketch_backend=cms&adaptive_window=1"
+        a = REGISTRY.build(spec, 600, data_plane="scalar", expected_entries=64)
+        ha = [a.access(k, s) for k, s in zip(keys, sizes)]
+        d = REGISTRY.build(spec, 600, data_plane="device_batched", expected_entries=64)
+        hd = [d.access(k, s) for k, s in zip(keys, sizes)]
+        _assert_byte_identical(a, d, np.asarray(ha), np.asarray(hd), "scalar access")
+        assert d._device_pipeline.decisions == 0  # batching is chunk-path only
+        assert d.admission_policy._device.calls > 0
+
+    def test_device_plane_auto_upgrades_under_access_batch(self):
+        """data_plane="device" driven through the engine's access_batch
+        path routes whole chunks into the decision-batched pipeline; the
+        scalar drive stays per-decision."""
+        tr, cap, ee = self._trace(scale=0.0008)
+        batched = SizeAwareWTinyLFU(cap, data_plane="device", expected_entries=ee)
+        SimulationEngine().run(batched, tr)
+        assert batched.admission_policy._device_batch.decisions > 0
+        scalar = SizeAwareWTinyLFU(cap, data_plane="device", expected_entries=ee)
+        SimulationEngine(use_batch=False).run(scalar, tr)
+        assert scalar.admission_policy._device_batch.decisions == 0
+        assert scalar.admission_policy._device.calls > 0
+
+    @pytest.mark.parametrize("admission,eviction",
+                             [("iv", "sampled_size"), ("qv", "sampled_frequency"),
+                              ("av", "random"), ("av", "slru")])
+    def test_engine_driven_byte_identity(self, admission, eviction):
+        """Engine-driven device_batched == scalar-driven scalar plane:
+        decisions, CacheStats, contents, fallback counters."""
+        tr, cap, ee = self._trace(scale=0.0008)
+        out = []
+        for plane, use_batch in (("scalar", False), ("device_batched", "auto")):
+            p = REGISTRY.build(
+                f"wtlfu-{admission}-{eviction}?sketch_backend=cms", cap,
+                data_plane=plane, expected_entries=ee, chunk=8)
+            rec = HitMaskRecorder()
+            SimulationEngine(instruments=(rec,), use_batch=use_batch).run(p, tr)
+            out.append((p, rec.hits))
+        (a, ha), (b, hb) = out
+        _assert_byte_identical(a, b, ha, hb, f"{admission}/{eviction} device_batched")
+        if eviction not in ("lru", "slru"):
+            assert a.main.fallback_scans == b.main.fallback_scans
+            _assert_mirror_synced(b, f"{admission}/{eviction}")
+
+    def test_warmup_snapshot_alignment_with_buffered_decisions(self):
+        """ISSUE 5 satellite: the pipeline resolves every buffered decision
+        before access_batch returns, so engine snapshots land exactly
+        ``snapshot_every`` accesses after warmup even when warmup ends
+        mid-chunk and decisions were in flight."""
+        tr, cap, ee = self._trace(scale=0.0008)
+        n = len(tr)
+        warmup, every = 137, 250
+        p = SizeAwareWTinyLFU(cap, data_plane="device_batched",
+                              eviction="sampled_frequency", expected_entries=ee)
+        res = SimulationEngine(chunk_size=100, warmup=warmup,
+                               snapshot_every=every).run(p, tr)
+        got = [s.accesses for s in res.snapshots]
+        assert got == [every * (i + 1) for i in range((n - warmup) // every)]
+
+    # -- speculation fallback coverage (ISSUE 5 satellite) -----------------
+
+    def test_aging_reset_mid_chunk_resyncs_and_matches(self):
+        """A tiny sketch forces aging resets inside buffered chunks: the
+        pipeline must split at the boundary via the per-decision staged
+        path (counted in resync_reasons['aging']) and stay byte-identical
+        — same resets, same ops counter, same decisions."""
+        tr, cap, ee = self._trace(scale=0.0008)
+        out = []
+        for plane in ("scalar", "device_batched"):
+            p = REGISTRY.build("wtlfu-qv-sampled_frequency?sketch_backend=cms",
+                               cap, data_plane=plane, expected_entries=16, chunk=8)
+            rec = HitMaskRecorder()
+            SimulationEngine(instruments=(rec,)).run(p, tr)
+            out.append((p, rec.hits))
+        (a, ha), (b, hb) = out
+        assert a.sketch.resets > 0, "sketch never aged; shrink expected_entries"
+        assert a.sketch.resets == b.sketch.resets
+        assert a.sketch._ops == b.sketch._ops
+        pipe = b.admission_policy._device_batch
+        assert pipe.resync_reasons["aging"] > 0, "aging resync never exercised"
+        _assert_byte_identical(a, b, ha, hb, "aging resync")
+
+    def test_victim_cap_overflow_poisons_and_resyncs(self):
+        """A decision selecting more victims than the scan kernel's static
+        victim_cap poisons the chunk suffix; the host must redo it through
+        the per-decision plane (resync_reasons['victim_cap']) and re-batch
+        the rest — byte-identical throughout. AV without early pruning
+        gathers long victim runs, so victim_cap=2 trips constantly."""
+        tr, cap, ee = self._trace(scale=0.0008)
+        spec = "wtlfu-av-random?early_pruning=0&sketch_backend=cms"
+        a = REGISTRY.build(spec, cap, data_plane="scalar", expected_entries=ee)
+        rec_a = HitMaskRecorder()
+        SimulationEngine(instruments=(rec_a,), use_batch=False).run(a, tr)
+        b = REGISTRY.build(spec, cap, data_plane="device_batched",
+                           expected_entries=ee)
+        b._device_pipeline = b.admission_policy.bind_device_batch_plane(
+            b.main, chunk=8, victim_cap=2)
+        rec_b = HitMaskRecorder()
+        SimulationEngine(instruments=(rec_b,)).run(b, tr)
+        pipe = b.admission_policy._device_batch
+        assert pipe.resync_reasons["victim_cap"] > 0, "victim cap never tripped"
+        assert pipe.batched_decisions > 0, "everything fell back: not a batching test"
+        _assert_byte_identical(a, b, rec_a.hits, rec_b.hits, "victim_cap resync")
+        _assert_mirror_synced(b, "victim_cap resync")
+
+    def test_mirror_overflow_mid_chunk_grows_and_matches(self):
+        """Entry growth past the mirror's slot table mid-run: the flush
+        pre-flight grows + re-uploads (resync_reasons['mirror_grow']) so no
+        in-scan insert can land past the device arrays; contents stay
+        byte-identical and the twin stays in sync."""
+        rng = np.random.default_rng(5)
+        ks = 800
+        keys = ((rng.zipf(1.25, size=2500) - 1) % ks).astype(np.int64)
+        sizes = np.minimum(rng.integers(8, 40, size=ks)[keys], 20).astype(np.int64)
+        cap = 20 * 400  # ~400 small entries: well past the 128-slot initial mirror
+        out = []
+        for plane in ("scalar", "device_batched"):
+            p = REGISTRY.build("wtlfu-qv-sampled_size?seed=9&sketch_backend=cms",
+                               cap, data_plane=plane, expected_entries=256, chunk=16)
+            hits = _drive_batched(p, keys, sizes, step=53)
+            out.append((p, hits))
+        (a, ha), (b, hb) = out
+        assert ha == hb and a.main.sizes == b.main.sizes
+        pipe = b.admission_policy._device_batch
+        assert len(b.main.keys) > 128
+        assert pipe.resync_reasons["mirror_grow"] > 0, "mirror growth never exercised"
+        _assert_mirror_synced(b, "mirror growth")
+
+    # -- DeviceMirror stale-slot regression (ISSUE 5 satellite) ------------
+
+    def test_mirror_stale_slot_same_decision_backfill_chain(self):
+        """Evicting multiple victims in one decision chains swap-removes:
+        a victim sitting in the back-fill (last) slot must be re-addressed
+        after earlier evictions move it. The device twin must match the
+        host eviction state byte-for-byte after every decision."""
+        p = SizeAwareWTinyLFU(
+            600, admission="av", eviction="sampled_size",
+            data_plane="device", window_frac=0.05, expected_entries=64,
+            sketch_kwargs={"sample_factor": 10_000})
+        rnd = random.Random(0xBEEF)
+        for i in range(600):
+            key = rnd.randrange(60)
+            p.access(key, 20 + (key * 13) % 90)  # multi-victim decisions
+            _assert_mirror_synced(p, f"access {i}")
+
+    def test_mirror_slot_reuse_across_decision_boundary(self):
+        """Evict-then-reinsert of the same key across a decision boundary
+        reuses freed slots: the twin must track the reused slot's new
+        (key, size), not the stale tenant — on both device planes."""
+        for plane in ("device", "device_batched"):
+            p = SizeAwareWTinyLFU(
+                400, admission="qv", eviction="sampled_frequency",
+                data_plane=plane, window_frac=0.1, expected_entries=64)
+            rnd = random.Random(7)
+            keys = [rnd.randrange(25) for _ in range(500)]
+            sizes = [15 + (k * 7) % 60 for k in keys]
+            if plane == "device":
+                for i, (k, s) in enumerate(zip(keys, sizes)):
+                    p.access(k, s)
+                    _assert_mirror_synced(p, f"{plane} access {i}")
+            else:
+                for lo in range(0, len(keys), 31):
+                    _drive_batched(p, keys[lo : lo + 31], sizes[lo : lo + 31], step=31)
+                    _assert_mirror_synced(p, f"{plane} chunk at {lo}")
 
 
 class TestFusedSketchPath:

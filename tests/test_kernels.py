@@ -62,6 +62,32 @@ class TestCMSKernel:
         new_table, vals = cms_ops.update_estimate(table, upd, jnp.asarray([42], jnp.int32), cap=15)
         assert int(vals[0]) == 15
 
+    @pytest.mark.parametrize("B,P,K", [(1, 16, 1), (4, 16, 3), (8, 64, 2)])
+    def test_segmented_update_estimate_matches_staged(self, B, P, K):
+        """ISSUE 5: the one-dispatch B-decision segmented op — each
+        decision's estimates must observe exactly the increment segments
+        that precede it (padded lanes masked by n_pend), value-identical
+        to B staged update-then-estimate rounds."""
+        rng = np.random.default_rng(B * 1000 + P + K)
+        width = 512
+        table0 = jnp.asarray(rng.integers(0, 12, (cms_ref.ROWS, width)), jnp.int32)
+        upd = jnp.asarray(rng.integers(0, 1 << 31, (B, P)), jnp.int32)
+        npend = jnp.asarray(rng.integers(0, P + 1, B), jnp.int32)
+        est = jnp.asarray(rng.integers(0, 1 << 31, (B, K)), jnp.int32)
+        # staged reference: per decision, apply its live segment then score
+        table = table0
+        want = []
+        for d in range(B):
+            seg = upd[d, : int(npend[d])]
+            if int(npend[d]):
+                table = cms_ops.update(table, seg, use_pallas=False)
+            want.append(np.asarray(cms_ops.estimate(table, est[d], use_pallas=False)))
+        for use_pallas in (True, False):
+            new_table, vals = cms_ops.update_estimate_segments(
+                table0, upd, npend, est, use_pallas=use_pallas)
+            np.testing.assert_array_equal(np.asarray(new_table), np.asarray(table))
+            np.testing.assert_array_equal(np.asarray(vals), np.stack(want))
+
     @settings(max_examples=20, deadline=None)
     @given(st.lists(st.integers(0, 100), min_size=1, max_size=128))
     def test_never_underestimates(self, key_list):

@@ -7,6 +7,9 @@ counters, same final cache contents — for every admission x eviction combo,
 sampled evictions included. ISSUE 4 extends the assertion three ways:
 ``data_plane="device"`` (the closed-loop device-resident decision kernel,
 CMS backend) must match both host planes over the same 21-combo grid.
+ISSUE 5 extends it four ways: ``data_plane="device_batched"`` (decision
+chunks per launch, driven through ``access_batch`` so the buffering
+engages) must match too — decisions, stats, contents, fallback counters.
 
 Four layers:
 
@@ -14,8 +17,9 @@ Four layers:
   hypothesis (tier-1), re-seedable via ``REPRO_DIFF_SEED`` (the nightly CI
   seed-matrix job reruns it under several fixed seeds);
 * the **device-plane grid**: the same 21 combos under ``sketch_backend=
-  "cms"``, asserting scalar == batched == device (decisions, CacheStats,
-  final cache contents, sampling fallback counters), same reseeding;
+  "cms"``, asserting scalar == batched == device == device_batched
+  (decisions, CacheStats, final cache contents, sampling fallback
+  counters), same reseeding;
 * **hypothesis properties** generating random traces (key skew, size
   distributions, capacities) and random ``PolicySpec`` strings (window
   fraction, pruning, ``?seed=``), asserting plane equivalence and spec
@@ -78,6 +82,21 @@ def _run_plane(spec, capacity, keys, sizes, plane, **kw):
     return p, hits
 
 
+def _run_plane_chunked(spec, capacity, keys, sizes, plane, step=29, **kw):
+    """Drive via ``access_batch`` in uneven chunks — the decision-batched
+    plane defers admissions inside a chunk, so this is the path that
+    exercises its buffering (access-by-access it degenerates to the
+    per-decision kernel)."""
+    p = REGISTRY.build(spec, capacity, data_plane=plane, **kw)
+    hits = []
+    ka = np.asarray(keys, dtype=np.int64)
+    sa = np.asarray(sizes, dtype=np.int64)
+    for lo in range(0, len(ka), step):
+        hits.extend(bool(h) for h in p.access_batch(ka[lo:lo + step], sa[lo:lo + step]))
+        assert p.used_bytes() <= p.capacity, "capacity invariant violated"
+    return p, hits
+
+
 def _assert_identical(a, b, hits_a, hits_b, label):
     assert hits_a == hits_b, f"{label}: hit/miss streams diverge"
     sa, sb = a.stats, b.stats
@@ -133,13 +152,15 @@ class TestSeededGrid:
 
 
 class TestDeviceSeededGrid:
-    """ISSUE 4 acceptance: ``data_plane="device"`` — the closed-loop
-    sample->score->select decision kernel — is byte-identical to BOTH host
+    """ISSUE 4/5 acceptance: ``data_plane="device"`` — the closed-loop
+    sample->score->select decision kernel — and ``"device_batched"`` — the
+    decision-chunked ``lax.scan`` pipeline, driven through ``access_batch``
+    so its buffering actually engages — are byte-identical to BOTH host
     planes for every admission x eviction combo under the CMS backend,
     reseedable via ``REPRO_DIFF_SEED``."""
 
     @pytest.mark.parametrize("admission,eviction", ALL_COMBOS)
-    def test_three_planes_byte_identical(self, admission, eviction):
+    def test_four_planes_byte_identical(self, admission, eviction):
         rng = np.random.default_rng([DIFF_SEED, 0xDE1CE, _combo_key(admission, eviction)])
         keys, sizes = _synth_trace(rng, n=220, key_space=32, size_mode="uniform")
         cap = max(120, int(np.mean(sizes) * 8))
@@ -149,13 +170,18 @@ class TestDeviceSeededGrid:
             _run_plane(spec, cap, keys, sizes, plane, expected_entries=64)
             for plane in ("scalar", "batched", "device")
         ]
-        (a, ha), (b, hb), (c, hc) = out
+        out.append(_run_plane_chunked(spec, cap, keys, sizes, "device_batched",
+                                      expected_entries=64, chunk=4))
+        (a, ha), (b, hb), (c, hc), (d, hd) = out
         _assert_identical(a, b, ha, hb, f"{spec} scalar-vs-batched")
         _assert_identical(a, c, ha, hc, f"{spec} scalar-vs-device")
+        _assert_identical(a, d, ha, hd, f"{spec} scalar-vs-device_batched")
         assert a.stats.evictions > 0, f"{spec}: trace never evicted"
         if eviction not in ("lru", "slru"):
             assert a.main.fallback_scans == c.main.fallback_scans, \
                 f"{spec}: device fallback-scan count diverges"
+            assert a.main.fallback_scans == d.main.fallback_scans, \
+                f"{spec}: device_batched fallback-scan count diverges"
 
     @pytest.mark.parametrize("eviction", ("sampled_frequency", "slru"))
     def test_device_pallas_branch_matches_scalar(self, eviction):
@@ -285,6 +311,10 @@ class TestCMSBackendDifferential:
                        expected_entries=64, sketch_backend="cms")
             for plane in ("scalar", "batched", "device")
         ]
-        (a, ha), (b, hb), (c, hc) = out
+        out.append(_run_plane_chunked(spec, cap, keys, sizes, "device_batched",
+                                      expected_entries=64, sketch_backend="cms",
+                                      chunk=6))
+        (a, ha), (b, hb), (c, hc), (d, hd) = out
         _assert_identical(a, b, ha, hb, f"cms:{spec}")
         _assert_identical(a, c, ha, hc, f"cms-device:{spec}")
+        _assert_identical(a, d, ha, hd, f"cms-device_batched:{spec}")

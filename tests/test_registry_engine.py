@@ -1,8 +1,11 @@
 """Tests for the policy registry (spec-driven construction) and the
 spec-driven, batched SimulationEngine."""
 
+import itertools
+
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     POLICY_NAMES,
@@ -62,6 +65,56 @@ class TestPolicySpec:
     def test_malformed_specs_raise(self, bad):
         with pytest.raises(ValueError):
             PolicySpec.parse(bad)
+
+    @pytest.mark.parametrize(
+        "value",
+        [
+            # ISSUE 5 regressions: every one of these USED to violate
+            # parse(to_string()) == spec before make() canonicalized params
+            "123", "1e3", "-7", "0x10", "+5", " 1 ", "1_000",  # numeric-looking str
+            "inf", "nan",                                      # special floats as str
+            float("nan"), float("inf"), -0.0,                  # exotic float values
+            -12345, 2**70,                                     # negative / wide ints
+            "True", "", "a b", "x&y=1", "%41",                 # genuinely-string strings
+            1000.0, 1e-5, 0.1, True, False,
+        ],
+    )
+    def test_exotic_scalar_round_trip(self, value):
+        spec = PolicySpec.make("p", x=value)
+        assert PolicySpec.parse(spec.to_string()) == spec
+
+    def test_nan_specs_compare_equal(self):
+        # NaN breaks == by definition, so the canonical form pins it to the
+        # string "nan" (which float-kind schemas still coerce at build time)
+        assert PolicySpec.parse("p?x=nan") == PolicySpec.parse("p?x=nan")
+        assert PolicySpec.make("p", x=float("nan")) == PolicySpec.parse("p?x=nan")
+
+    def test_canonicalized_str_params_still_coerce_at_build(self):
+        # "0.2" canonicalizes to the float in the spec; the schema's
+        # declared param types re-coerce while building
+        p = REGISTRY.build(PolicySpec.make("wtlfu-av", window_frac="0.2",
+                                           early_pruning="0"),
+                           1000, expected_entries=32)
+        assert p.window_cap == 200
+        assert p.early_pruning is False
+
+    @settings(max_examples=120, deadline=None)
+    @given(
+        value=st.one_of(
+            st.integers(),
+            st.floats(allow_nan=True, allow_infinity=True),
+            st.booleans(),
+            st.text(max_size=40),
+        )
+    )
+    def test_round_trip_property(self, value):
+        """Hypothesis: parse(to_string()) == spec for EVERY scalar the
+        schema accepts — ints (any sign/width), floats (NaN and
+        infinities included), bools, and arbitrary text."""
+        spec = PolicySpec.make("p", x=value, y=0)
+        assert PolicySpec.parse(spec.to_string()) == spec
+        # and to_string is a fixed point: re-rendering cannot drift
+        assert PolicySpec.parse(spec.to_string()).to_string() == spec.to_string()
 
 
 # -- PolicyRegistry ----------------------------------------------------------
@@ -184,6 +237,54 @@ class TestEngine:
         assert [s.accesses for s in res.snapshots] == expected
         last = res.snapshots[-1]
         assert last.hit_ratio == last.hits / last.accesses
+
+    @pytest.mark.parametrize("use_batch", [True, False])
+    def test_snapshot_alignment_sweep(self, use_batch):
+        """ISSUE 5 regression sweep: for EVERY (warmup, chunk_size,
+        snapshot_every) combination — warmup ending mid-chunk, at chunk
+        boundaries, spanning multiple chunks, exceeding the trace — the
+        first post-warmup snapshot lands exactly ``snapshot_every``
+        accesses after warmup and every later one exactly
+        ``snapshot_every`` after that, on both drive paths."""
+
+        class Counting:
+            capacity = 10**9
+
+            def __init__(self):
+                self.stats = CacheStats()
+
+            def used_bytes(self):
+                return 0
+
+            def access(self, key, size):
+                self.stats.accesses += 1
+                self.stats.bytes_requested += size
+                return False
+
+            def access_batch(self, keys, sizes):
+                self.stats.accesses += len(keys)
+                self.stats.bytes_requested += int(np.sum(sizes))
+                return np.zeros(len(keys), dtype=bool)
+
+        n = 103
+        tr = AccessTrace("t", np.arange(n, dtype=np.int64),
+                         np.ones(n, dtype=np.int64))
+        for warmup, chunk, every, limit in itertools.product(
+                (0, 1, 7, 16, 19, 64, 103, 150), (1, 3, 16, 64),
+                (1, 4, 9, 50), (None, 60)):
+            res = SimulationEngine(
+                chunk_size=chunk, warmup=warmup, snapshot_every=every,
+                use_batch=use_batch,
+            ).run(Counting(), tr, limit=limit)
+            total = n if limit is None else min(n, limit)
+            post = max(0, total - warmup)
+            expected = [every * (i + 1) for i in range(post // every)]
+            got = [s.accesses for s in res.snapshots]
+            assert got == expected, (
+                f"warmup={warmup} chunk={chunk} every={every} limit={limit}: "
+                f"snapshots at {got}, expected {expected}")
+            if warmup and total > warmup:
+                assert res.warmup_stats.accesses == warmup
 
     def test_instrument_hooks_fire(self):
         calls = {"start": 0, "access": 0, "chunk": 0, "snapshot": 0, "end": 0}

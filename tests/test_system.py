@@ -2,11 +2,62 @@
 trace -> policy -> metrics, the paper's headline claims as assertions, and
 the cross-layer integrations (serving cache + data cache)."""
 
+import importlib.util
+import json
+import pathlib
+
 import numpy as np
 import pytest
 
 from repro.core import make_policy, simulate
 from repro.traces import make_trace
+
+
+class TestBenchTrajectory:
+    """ISSUE 5 satellite: ``benchmarks/run.py overhead`` appends a dated
+    entry to the BENCH_overhead.json trajectory (stable schema 2) instead
+    of overwriting, migrating legacy schema-1 row lists in place."""
+
+    def _module(self):
+        path = pathlib.Path(__file__).parent.parent / "benchmarks" / "run.py"
+        spec = importlib.util.spec_from_file_location("bench_run_under_test", path)
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        return mod
+
+    def test_appends_dated_entries(self, tmp_path):
+        m = self._module()
+        m.BENCH_OVERHEAD_PATH = tmp_path / "BENCH_overhead.json"
+        rows = [{"policy": "x", "us_per_access": 2.0, "data_plane": "device_batched",
+                 "trace": "t", "capacity": 1}]
+        m.write_bench_overhead(rows)
+        m.write_bench_overhead(rows)
+        data = json.loads(m.BENCH_OVERHEAD_PATH.read_text())
+        assert data["schema"] == 2
+        assert len(data["history"]) == 2
+        assert all(e["timestamp"] for e in data["history"])
+        assert data["history"][-1]["rows"][0]["accesses_per_sec"] == 500000.0
+
+    def test_migrates_legacy_row_list(self, tmp_path):
+        m = self._module()
+        m.BENCH_OVERHEAD_PATH = tmp_path / "BENCH_overhead.json"
+        legacy = [{"policy": "old", "data_plane": None, "trace": "t",
+                   "capacity": 9, "accesses_per_sec": 1.0}]
+        m.BENCH_OVERHEAD_PATH.write_text(json.dumps(legacy))
+        m.write_bench_overhead([{"policy": "new", "us_per_access": 1.0}])
+        data = json.loads(m.BENCH_OVERHEAD_PATH.read_text())
+        assert [e["timestamp"] for e in data["history"]][0] is None  # legacy entry
+        assert data["history"][0]["rows"] == legacy
+        assert data["history"][1]["rows"][0]["policy"] == "new"
+
+    def test_history_is_capped(self, tmp_path):
+        m = self._module()
+        m.BENCH_OVERHEAD_PATH = tmp_path / "BENCH_overhead.json"
+        m.BENCH_HISTORY_MAX = 3
+        for _ in range(5):
+            m.write_bench_overhead([{"policy": "p", "us_per_access": 1.0}])
+        data = json.loads(m.BENCH_OVERHEAD_PATH.read_text())
+        assert len(data["history"]) == 3
 
 
 @pytest.fixture(scope="module")

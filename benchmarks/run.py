@@ -29,14 +29,16 @@ import pathlib
 import sys
 import time
 
-BENCH_OVERHEAD_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_overhead.json"
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH_OVERHEAD_PATH = _ROOT / "BENCH_overhead.json"
+BENCH_SERVING_PATH = _ROOT / "BENCH_serving.json"
 #: Trajectory length cap: nightly appends one entry per run.
 BENCH_HISTORY_MAX = 180
 
 
-def _load_bench_history() -> "list[dict]":
+def _load_bench_history(path: pathlib.Path) -> "list[dict]":
     try:
-        with open(BENCH_OVERHEAD_PATH) as f:
+        with open(path) as f:
             prior = json.load(f)
     except (OSError, ValueError):
         return []
@@ -45,6 +47,17 @@ def _load_bench_history() -> "list[dict]":
     if isinstance(prior, dict) and isinstance(prior.get("history"), list):
         return prior["history"]
     return []
+
+
+def _append_trajectory(path: pathlib.Path, rows: "list[dict]") -> None:
+    """Append one dated entry of condensed rows to a schema-2 trajectory
+    file, capping history at BENCH_HISTORY_MAX entries."""
+    history = _load_bench_history(path)
+    stamp = datetime.datetime.now(datetime.timezone.utc).isoformat(timespec="seconds")
+    history.append({"timestamp": stamp, "rows": rows})
+    history = history[-BENCH_HISTORY_MAX:]
+    with open(path, "w") as f:
+        json.dump({"schema": 2, "history": history}, f, indent=1)
 
 
 def write_bench_overhead(rows: "list[dict]") -> None:
@@ -60,12 +73,20 @@ def write_bench_overhead(rows: "list[dict]") -> None:
         for r in rows
         if r.get("policy") and r.get("us_per_access")
     ]
-    history = _load_bench_history()
-    stamp = datetime.datetime.now(datetime.timezone.utc).isoformat(timespec="seconds")
-    history.append({"timestamp": stamp, "rows": out})
-    history = history[-BENCH_HISTORY_MAX:]
-    with open(BENCH_OVERHEAD_PATH, "w") as f:
-        json.dump({"schema": 2, "history": history}, f, indent=1)
+    _append_trajectory(BENCH_OVERHEAD_PATH, out)
+
+
+def write_bench_serving(rows: "list[dict]") -> None:
+    """Append this run's serving load-benchmark rows to BENCH_serving.json."""
+    keep = (
+        "policy", "admission", "arch", "trace", "n_requests",
+        "requests_per_sec", "decision_p50_ms", "decision_p99_ms",
+        "max_queue_depth", "request_hit_ratio", "token_hit_ratio",
+        "byte_hit_ratio",
+    )
+    out = [{k: r.get(k) for k in keep} for r in rows
+           if r.get("bench") == "serving_load"]
+    _append_trajectory(BENCH_SERVING_PATH, out)
 
 
 def main() -> None:
@@ -79,10 +100,11 @@ def main() -> None:
         "robustness": robustness.main,  # Figs 11-12 (hit ratio over time)
         "overhead": overhead.main,  # Fig 13 / Table 2
     }
-    try:  # serving integration bench (needs the serving stack)
+    try:  # serving integration benches (need the serving stack)
         from . import serving_cache
 
         benches["serving_cache"] = serving_cache.main
+        benches["serving"] = serving_cache.load_main  # end-to-end load bench
     except ImportError:
         pass
     try:  # kernel micro-benchmarks (interpret mode)
@@ -92,7 +114,13 @@ def main() -> None:
     except ImportError:
         pass
 
-    selected = sys.argv[1:] or list(benches)
+    args = sys.argv[1:]
+    if "--quick" in args:  # smoke tier: tiny fixed-seed configs
+        args.remove("--quick")
+        import os
+
+        os.environ["REPRO_BENCH_QUICK"] = "1"
+    selected = args or list(benches)
     print("name,us_per_call,derived")
     for name in selected:
         t0 = time.perf_counter()
@@ -100,6 +128,9 @@ def main() -> None:
         if name == "overhead" and rows:
             write_bench_overhead(rows)
             print(f"# appended trajectory entry to {BENCH_OVERHEAD_PATH}", flush=True)
+        if name == "serving" and rows:
+            write_bench_serving(rows)
+            print(f"# appended trajectory entry to {BENCH_SERVING_PATH}", flush=True)
         print(f"# {name} done in {time.perf_counter() - t0:.1f}s", flush=True)
 
 

@@ -233,6 +233,30 @@ class SizeAwareWTinyLFU:
     def used_bytes(self) -> int:
         return self.window_bytes + self.main.used
 
+    # -- deferred-pipeline control ----------------------------------------
+    def sync_deferred(self) -> None:
+        """Resolve any decisions the device-batched pipeline left queued or
+        in flight (no-op on host planes, or when nothing is deferred).
+        Host-view structures, membership, and stats are exact after this."""
+        pipe = self._device_pipeline
+        if pipe is not None and pipe.has_deferred_work:
+            pipe.sync(self)
+
+    def discard(self, key: int) -> bool:
+        """Forcibly remove ``key`` from the cache (serving-layer reclaim:
+        the block pool needs the bytes back regardless of policy opinion).
+        Returns True if the key was resident. Counts as an eviction."""
+        self.sync_deferred()
+        if key in self.window:
+            self.window_bytes -= self.window.pop(key)
+            self.stats.evictions += 1
+            return True
+        if key in self.main:
+            self.main.evict(key)
+            self.stats.evictions += 1
+            return True
+        return False
+
     # -- hot path ------------------------------------------------------------
     def access(self, key: int, size: int) -> bool:
         st = self.stats

@@ -809,6 +809,24 @@ class DeviceAdmissionPlane:
         return False
 
 
+class _InFlightChunk:
+    """A dispatched-but-uncollected chunk launch: the queue slice it
+    covers plus the (possibly still computing) device arrays. Holding
+    un-materialized jax arrays here is what lets the chunk resolve on
+    device while the host gathers the next batch of accesses."""
+
+    __slots__ = ("q", "b_last", "table", "mkeys", "msizes", "out", "victims")
+
+    def __init__(self, *, q, b_last, table, mkeys, msizes, out, victims):
+        self.q = q
+        self.b_last = b_last
+        self.table = table
+        self.mkeys = mkeys
+        self.msizes = msizes
+        self.out = out
+        self.victims = victims
+
+
 class DeviceBatchedAdmissionPlane:
     """``data_plane="device_batched"``: amortize kernel dispatch over a
     CHUNK of admission decisions.
@@ -877,8 +895,19 @@ class DeviceBatchedAdmissionPlane:
         self.resyncs = 0  # host-resync fallbacks, by reason below
         self.resync_reasons = {"aging": 0, "flush_block": 0,
                                "victim_cap": 0, "mirror_grow": 0}
+        #: When True the trailing end-of-``access_batch`` flush dispatches
+        #: the chunk kernel but does NOT block on its result: the chunk
+        #: resolves on device while the caller gathers the next batch of
+        #: accesses (JAX async dispatch). Stats and host structures are
+        #: exact only after :meth:`sync`; the drive loop's visibility
+        #: triggers (main hit / pending-candidate touch) still force a
+        #: collect, so hit/miss answers stay byte-identical. Set by the
+        #: serving-layer async admission pipeline.
+        self.defer_collect = False
+        self.deferred_dispatches = 0  # chunk launches left in flight
         self._queue: list[tuple[int, int, int]] = []  # (key, size, boundary)
         self._pending_keys: set[int] = set()
+        self._inflight: "_InFlightChunk | None" = None
 
     # -- the chunked drive loop -------------------------------------------
     def drive_chunk(self, pol, keys, sizes) -> np.ndarray:
@@ -923,8 +952,21 @@ class DeviceBatchedAdmissionPlane:
             if adaptive:
                 self._flush(pol)
                 pol._maybe_adapt()
-        self._flush(pol)  # access_batch returns with exact stats
+        # exact-stats contract: resolve everything before returning —
+        # unless the owner opted into deferred collection, in which case
+        # the trailing chunk is dispatched and left resolving on device
+        self._flush(pol, defer=self.defer_collect)
         return hits
+
+    @property
+    def has_deferred_work(self) -> bool:
+        """True while decisions are queued or a chunk is in flight."""
+        return bool(self._queue) or self._inflight is not None
+
+    def sync(self, pol) -> None:
+        """Resolve every deferred decision — queued and in flight. After
+        this, host structures and ``pol.stats`` are exact."""
+        self._flush(pol)
 
     def _on_miss(self, pol, key: int, size: int) -> None:
         """Alg. 1 miss cascade, decisions deferred into the buffer."""
@@ -957,7 +999,15 @@ class DeviceBatchedAdmissionPlane:
             self._execute_now(pol, key, size)
             return
         boundary = len(sk._pending)
-        prev = self._queue[-1][2] if self._queue else 0
+        # the previous decision's boundary may live in the in-flight chunk
+        # (sk._pending is only sliced at collect, so boundaries recorded
+        # before and after a deferred dispatch share one offset space)
+        if self._queue:
+            prev = self._queue[-1][2]
+        elif self._inflight is not None:
+            prev = self._inflight.b_last
+        else:
+            prev = 0
         if boundary - prev > sk.flush_block or sk._ops + boundary >= sk.sample_size:
             # speculation depth exceeded: an aging reset lands inside the
             # chunk (or one segment outgrew the fused-flush budget) —
@@ -992,13 +1042,31 @@ class DeviceBatchedAdmissionPlane:
         self.decisions += 1
 
     # -- buffer resolution -------------------------------------------------
-    def _flush(self, pol) -> None:
+    def _rebuild_pending(self) -> None:
+        """Recompute the pending-candidate key set from the queue and the
+        in-flight chunk, mutating the live set in place (the drive loop
+        holds a reference to it)."""
+        pk = {k for k, _, _ in self._queue}
+        if self._inflight is not None:
+            pk.update(k for k, _, _ in self._inflight.q)
+        self._pending_keys.clear()
+        self._pending_keys.update(pk)
+
+    def _flush(self, pol, defer: bool = False) -> None:
         """Resolve every buffered decision: one chunk-kernel launch per
         iteration, applying the ok-prefix and resyncing a poisoned
-        (victim-cap overflow) decision through the per-decision plane."""
+        (victim-cap overflow) decision through the per-decision plane.
+
+        With ``defer=True`` the last chunk launch is left IN FLIGHT: its
+        device arrays are not materialized and its verdicts are not yet
+        applied to the host structures. The next ``_flush`` (or
+        :meth:`sync`) collects it first — chunk N resolves on device while
+        chunk N+1's accesses are gathered."""
+        if defer and not self._queue:
+            return  # nothing new to resolve; leave any in-flight chunk be
+        self._collect(pol)
         if not self._queue:
             return
-        self._pending_keys.clear()
         self.flushes += 1
         while self._queue:
             q = self._queue
@@ -1027,14 +1095,32 @@ class DeviceBatchedAdmissionPlane:
                 sk._pending = sk._pending[:b]
                 self._execute_now(pol, key, size)
                 sk._pending = sk._pending + saved
-                return
-            okn, poisoned = self._launch(pol, q)
-            if okn == len(q):
-                return
-            # q[okn] overflowed victim_cap: its segment flush already
-            # landed in-kernel, so hide the post-decision increment tail,
-            # redo it per-decision, then re-buffer the untouched suffix
-            # (boundaries rebased onto the restored pending list).
+                continue
+            self._inflight = self._dispatch(pol, q)
+            if defer:
+                self.deferred_dispatches += 1
+                break
+            self._collect(pol)  # blocks; may re-buffer a poisoned suffix
+        self._rebuild_pending()
+
+    def _collect(self, pol) -> None:
+        """Materialize the in-flight chunk (blocking on the device result)
+        and apply its verdicts. A poisoned (victim-cap overflow) decision
+        resyncs through the per-decision plane and the untouched suffix is
+        re-buffered AHEAD of any newer queued decisions, all boundaries
+        rebased onto the sliced pending list."""
+        if self._inflight is None:
+            return
+        inf, self._inflight = self._inflight, None
+        okn = self._apply(pol, inf)
+        q = inf.q
+        # decisions enqueued while the chunk was in flight recorded
+        # boundaries into the pre-slice pending list; _apply sliced off
+        # applied_b (== b_last, or the poisoned decision's own boundary),
+        # so every surviving boundary rebases by that amount
+        applied_b = q[okn][2] if okn < len(q) else inf.b_last
+        suffix = []
+        if okn < len(q):
             key, size, b = q[okn]
             sk = self.sketch
             saved = sk._pending
@@ -1043,11 +1129,14 @@ class DeviceBatchedAdmissionPlane:
             self.resync_reasons["victim_cap"] += 1
             self._execute_now(pol, key, size)
             sk._pending = saved
-            self._queue = [(k, s, bb - b) for k, s, bb in q[okn + 1:]]
+            suffix = [(k, s, bb - applied_b) for k, s, bb in q[okn + 1:]]
+        self._queue = suffix + [(k, s, bb - applied_b) for k, s, bb in self._queue]
+        self._rebuild_pending()
 
-    def _launch(self, pol, q) -> tuple[int, bool]:
-        """One `_decide_sampled_chunk` launch over ``q``; applies the
-        ok-prefix to the host structures. Returns (ok_count, poisoned)."""
+    def _dispatch(self, pol, q) -> "_InFlightChunk":
+        """One `_decide_sampled_chunk` launch over ``q`` — host-side prep
+        plus the (async) kernel call, WITHOUT materializing the result.
+        Pair with :meth:`_apply`."""
         sk = self.sketch
         main = self.main
         dev = self.device
@@ -1094,17 +1183,31 @@ class DeviceBatchedAdmissionPlane:
             use_pallas=sk.use_pallas, interpret=dev._interpret,
             vcap=self.victim_cap)
         self.chunk_calls += 1
-        out = np.asarray(out)  # [B, 6]: ok, admit, free, n_evict, examined, fallbacks
+        return _InFlightChunk(q=q, b_last=b_last, table=table, mkeys=mkeys,
+                              msizes=msizes, out=out, victims=victims)
+
+    def _apply(self, pol, inf: "_InFlightChunk") -> int:
+        """Blocking tail of a chunk launch: materialize the verdict vector
+        (this is where JAX async dispatch makes us wait for the device),
+        commit the sketch, adopt the mirror arrays, and replay the
+        ok-prefix verdicts on the host structures. Returns ok_count."""
+        sk = self.sketch
+        main = self.main
+        q = inf.q
+        nq = len(q)
+        out = np.asarray(inf.out)  # [B, 6]: ok, admit, free, n_evict, examined, fallbacks
+        victims = inf.victims
+        mkeys, msizes = inf.mkeys, inf.msizes
         ok = out[:, 0]
         okn = 0
         while okn < nq and ok[okn]:
             okn += 1
         # commit the sketch through the last in-kernel-flushed segment: the
         # ok-prefix plus, when poisoned, the overflowing decision's own
-        applied_b = q[okn][2] if okn < nq else b_last
-        sk.table = table
+        applied_b = q[okn][2] if okn < nq else inf.b_last
+        sk.table = inf.table
         sk._ops += applied_b
-        sk._pending = pend[applied_b:]
+        sk._pending = sk._pending[applied_b:]
         # adopt the post-scan mirror arrays, then replay the verdict vector
         # on the host structures with dirty-marking suppressed (the scan
         # already performed these exact slot writes)
@@ -1137,4 +1240,4 @@ class DeviceBatchedAdmissionPlane:
                 self.batched_decisions += 1
         finally:
             self.mirror.end_applied()
-        return okn, okn < nq
+        return okn

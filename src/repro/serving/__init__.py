@@ -1,12 +1,23 @@
 """Serving substrate: paged KV bookkeeping, the paper's size-aware prefix
-cache, continuous-batching scheduler, and the (CPU-scale) engine."""
+cache, the async admission pipeline, continuous-batching scheduler, and
+the (CPU-scale) engine."""
 
+from .admission import (
+    AdmissionHook,
+    AsyncAdmissionPipeline,
+    SyncAdmission,
+    make_admission_hook,
+)
 from .engine import Engine, EngineConfig
 from .kvcache import BlockPool, block_hashes
 from .prefix_cache import PrefixCache, PrefixCacheConfig, kv_bytes_per_token
 from .scheduler import Request, Scheduler, SchedulerConfig
 
 __all__ = [
+    "AdmissionHook",
+    "AsyncAdmissionPipeline",
+    "SyncAdmission",
+    "make_admission_hook",
     "Engine",
     "EngineConfig",
     "BlockPool",

@@ -32,6 +32,10 @@ class EngineConfig:
     cache_policy: str = "wtlfu-av"
     block_size: int = 8
     greedy: bool = True
+    #: "sync" (verdict per offer) or "async" (the deferred admission
+    #: pipeline — offers/touches batch through the policy's data plane and
+    #: resolve only when a request could observe the verdict)
+    cache_admission: str = "sync"
 
 
 class Engine:
@@ -46,6 +50,7 @@ class Engine:
                 block_size=cfg.block_size,
                 bytes_per_token=bpt,
                 policy=cfg.cache_policy,
+                admission=cfg.cache_admission,
             )
         )
         self.scheduler = Scheduler(SchedulerConfig())

@@ -2,11 +2,16 @@
 prefill token budget per step and preemption when the block pool runs dry.
 
 The scheduler is pure bookkeeping (testable without tensors); the engine
-drives it with real model calls."""
+drives it with real model calls. When constructed with a BlockPool it also
+owns each request's *live* KV block allocation: blocks are acquired when a
+request is picked for prefill and released exactly once on completion or
+preemption (idempotent release — the preempt → resubmit → finish cycle can
+never double-free or leak; see test_serving_admission.py)."""
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
 from typing import Callable
 
@@ -23,6 +28,7 @@ class Request:
     cached_tokens: int = 0
     state: str = "waiting"  # waiting | prefill | decode | done
     preemptions: int = 0
+    block_ids: list = dataclasses.field(default_factory=list)  # live KV blocks
 
     @property
     def done(self) -> bool:
@@ -36,11 +42,14 @@ class SchedulerConfig:
 
 
 class Scheduler:
-    def __init__(self, cfg: SchedulerConfig):
+    def __init__(self, cfg: SchedulerConfig, pool=None, block_size: int = 16):
         self.cfg = cfg
+        self.pool = pool  # optional BlockPool for live-KV accounting
+        self.block_size = block_size
         self.waiting: deque[Request] = deque()
         self.running: list[Request] = []
         self.finished: list[Request] = []
+        self.alloc_failures = 0  # schedule() stalls on pool pressure
 
     def submit(self, req: Request) -> None:
         self.waiting.append(req)
@@ -48,6 +57,32 @@ class Scheduler:
     @property
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
+
+    # -- live-KV block accounting -----------------------------------------
+    def _blocks_needed(self, req: Request) -> int:
+        return math.ceil((len(req.prompt) + req.max_new_tokens) / self.block_size)
+
+    def _acquire_blocks(self, req: Request) -> bool:
+        """Allocate the request's live KV blocks (idempotent: a request
+        already holding blocks keeps them). Returns False on pool
+        pressure — the caller leaves the request waiting."""
+        if self.pool is None or req.block_ids:
+            return True
+        got = self.pool.alloc(self._blocks_needed(req))
+        if got is None:
+            return False
+        req.block_ids = got
+        return True
+
+    def _release_blocks(self, req: Request) -> None:
+        """Release the request's live blocks exactly once. Idempotent:
+        ``block_ids`` is cleared before unref returns, so preempting an
+        already-released request (or finishing a preempted one) is safe."""
+        if self.pool is None or not req.block_ids:
+            return
+        ids, req.block_ids = req.block_ids, []
+        self.pool.unref(ids)
+        self.pool.check_invariants()
 
     def schedule(self) -> tuple[list[Request], list[Request]]:
         """One scheduling decision: returns (to_prefill, to_decode)."""
@@ -58,6 +93,9 @@ class Scheduler:
             and len(self.running) + len(to_prefill) < self.cfg.max_running
             and budget >= len(self.waiting[0].prompt) - self.waiting[0].cached_tokens
         ):
+            if not self._acquire_blocks(self.waiting[0]):
+                self.alloc_failures += 1
+                break  # pool pressure: leave it queued, try next step
             req = self.waiting.popleft()
             budget -= len(req.prompt) - req.cached_tokens
             req.state = "prefill"
@@ -75,6 +113,7 @@ class Scheduler:
             req.state = "done"
             self.running.remove(req)
             self.finished.append(req)
+            self._release_blocks(req)
 
     def preempt(self, req: Request) -> None:
         """Evict a running request back to the queue (block-pool pressure);
@@ -85,3 +124,4 @@ class Scheduler:
         req.cached_tokens = 0
         self.running.remove(req)
         self.waiting.appendleft(req)
+        self._release_blocks(req)

@@ -2,6 +2,7 @@
 classes (Table 1 / Fig. 8), workload-shift stress traces, and simple
 on-disk trace formats."""
 
+from .arrivals import ARRIVAL_SPECS, ArrivalSpec, ArrivalTrace, make_arrivals
 from .formats import load_trace, save_trace
 from .synthetic import (
     SHIFT_SPECS,
@@ -13,6 +14,10 @@ from .synthetic import (
 )
 
 __all__ = [
+    "ARRIVAL_SPECS",
+    "ArrivalSpec",
+    "ArrivalTrace",
+    "make_arrivals",
     "make_trace",
     "paper_traces",
     "TRACE_SPECS",

@@ -1,0 +1,149 @@
+"""Bursty multi-tenant open-loop arrival generator for the serving load
+benchmark.
+
+Models the traffic shape the paper's serving story cares about: several
+tenants, each replaying a Zipf-popular set of prompt templates (plus a
+slice of globally shared templates — cross-tenant prefix reuse), with
+requests arriving on an *open-loop* Poisson clock whose rate is modulated
+by an on/off burst process (exponential dwell times, rate multiplied
+during bursts). Open-loop means arrival times are generated independently
+of service times, so a slow admission path shows up as queue depth and
+latency rather than silently throttling the offered load.
+
+Determinism follows the synthetic-trace idiom: ``np.random.default_rng``
+seeded by ``[seed, crc32(name)]`` — stable across processes and Python
+hash randomization.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import numpy as np
+
+__all__ = ["ArrivalSpec", "ArrivalTrace", "make_arrivals", "ARRIVAL_SPECS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalSpec:
+    name: str
+    n_requests: int = 4000
+    n_tenants: int = 4
+    templates_per_tenant: int = 80
+    shared_templates: int = 40  # global pool every tenant can draw from
+    shared_frac: float = 0.25  # fraction of requests hitting the pool
+    zipf_alpha: float = 0.9  # template popularity skew
+    base_rps: float = 200.0  # per-tenant baseline arrival rate
+    burst_on_s: float = 0.5  # mean burst duration
+    burst_off_s: float = 2.0  # mean quiet duration
+    burst_rate_mult: float = 6.0  # rate multiplier inside a burst
+    len_short: tuple = (64, 256)  # short-prompt token range
+    len_long: tuple = (1024, 4096)  # long-prompt token range
+    long_frac: float = 0.15  # fraction of long prompts
+    suffix_tokens: int = 12  # unique per-request tail (never cacheable)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalTrace:
+    """Parallel arrays, sorted by arrival time."""
+
+    t_arrive: np.ndarray  # float64 seconds
+    tenant: np.ndarray  # int32
+    template: np.ndarray  # int32 global template id
+    template_len: np.ndarray  # int32 cacheable prompt-template tokens
+    suffix_len: np.ndarray  # int32 unique tail tokens
+
+    def __len__(self) -> int:
+        return len(self.t_arrive)
+
+
+def _zipf_weights(n: int, alpha: float) -> np.ndarray:
+    w = 1.0 / np.arange(1, n + 1, dtype=np.float64) ** alpha
+    return w / w.sum()
+
+
+def _burst_rate(rng, t_end: float, spec: ArrivalSpec):
+    """Piecewise-constant rate envelope: alternating off/on dwell times."""
+    times = [0.0]
+    rates = []
+    on = False
+    t = 0.0
+    while t < t_end:
+        dwell = rng.exponential(spec.burst_on_s if on else spec.burst_off_s)
+        rate = spec.base_rps * (spec.burst_rate_mult if on else 1.0)
+        t += max(dwell, 1e-6)
+        times.append(t)
+        rates.append(rate)
+        on = not on
+    return np.asarray(times), np.asarray(rates)
+
+
+def make_arrivals(spec: ArrivalSpec, seed: int = 0, scale: float = 1.0) -> ArrivalTrace:
+    """Generate ``spec`` deterministically; ``scale`` multiplies the
+    request count (benchmark tiers)."""
+    n_total = max(16, int(spec.n_requests * scale))
+    rng = np.random.default_rng([seed, zlib.crc32(spec.name.encode()) & 0x7FFFFFFF])
+    per_tenant = np.full(spec.n_tenants, n_total // spec.n_tenants, np.int64)
+    per_tenant[: n_total - per_tenant.sum()] += 1
+
+    # template id space: [0, shared) is the global pool, then one
+    # contiguous slab per tenant
+    shared_w = _zipf_weights(max(spec.shared_templates, 1), spec.zipf_alpha)
+    local_w = _zipf_weights(spec.templates_per_tenant, spec.zipf_alpha)
+    # rough horizon so the burst envelope covers every arrival
+    horizon = 4.0 * n_total / max(spec.n_tenants * spec.base_rps, 1e-9)
+
+    t_all, tenant_all, tmpl_all = [], [], []
+    for ten in range(spec.n_tenants):
+        n = int(per_tenant[ten])
+        if n == 0:
+            continue
+        # thinned Poisson process under the burst envelope: draw arrival
+        # gaps at the envelope's max rate, keep each with p = rate(t)/max
+        times, rates = _burst_rate(rng, horizon, spec)
+        rmax = spec.base_rps * spec.burst_rate_mult
+        t = 0.0
+        kept = []
+        while len(kept) < n:
+            t += rng.exponential(1.0 / rmax)
+            seg = np.searchsorted(times, t, side="right") - 1
+            rate = rates[min(seg, len(rates) - 1)]
+            if rng.random() < rate / rmax:
+                kept.append(t)
+        t_all.append(np.asarray(kept))
+        tenant_all.append(np.full(n, ten, np.int32))
+        shared = rng.random(n) < spec.shared_frac
+        local_ids = spec.shared_templates + ten * spec.templates_per_tenant \
+            + rng.choice(spec.templates_per_tenant, size=n, p=local_w)
+        shared_ids = rng.choice(max(spec.shared_templates, 1), size=n, p=shared_w)
+        tmpl_all.append(np.where(shared, shared_ids, local_ids).astype(np.int32))
+
+    t_arrive = np.concatenate(t_all)
+    order = np.argsort(t_arrive, kind="stable")
+    t_arrive = t_arrive[order]
+    tenant = np.concatenate(tenant_all)[order]
+    template = np.concatenate(tmpl_all)[order]
+
+    # per-template length, fixed for the template's lifetime (prefix reuse
+    # requires identical templates to replay identical token prefixes)
+    n_templates = spec.shared_templates + spec.n_tenants * spec.templates_per_tenant
+    lo_s, hi_s = spec.len_short
+    lo_l, hi_l = spec.len_long
+    tmpl_lens = np.where(
+        rng.random(n_templates) < spec.long_frac,
+        rng.integers(lo_l, hi_l + 1, n_templates),
+        rng.integers(lo_s, hi_s + 1, n_templates),
+    ).astype(np.int32)
+    template_len = tmpl_lens[template]
+    suffix_len = rng.integers(1, spec.suffix_tokens + 1, len(template)).astype(np.int32)
+    return ArrivalTrace(t_arrive, tenant, template, template_len, suffix_len)
+
+
+ARRIVAL_SPECS = {
+    "bursty_multitenant": ArrivalSpec(name="bursty_multitenant"),
+    "bursty_small": ArrivalSpec(
+        name="bursty_small", n_requests=800, n_tenants=2,
+        templates_per_tenant=30, shared_templates=15,
+        len_long=(512, 1024), long_frac=0.1),
+}

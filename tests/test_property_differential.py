@@ -318,3 +318,55 @@ class TestCMSBackendDifferential:
         _assert_identical(a, b, ha, hb, f"cms:{spec}")
         _assert_identical(a, c, ha, hc, f"cms-device:{spec}")
         _assert_identical(a, d, ha, hd, f"cms-device_batched:{spec}")
+
+
+class TestServingDifferential:
+    """ISSUE 6 fifth column: decisions driven *through the serving layer*
+    — ``PrefixCache`` with the async admission pipeline (event queue ->
+    ``access_batch`` -> deferred device chunks) must replay byte-identical
+    to the synchronous per-access hook: same resident entries, same hit
+    ratios, same policy stats, same window/main contents."""
+
+    BLOCK = 4
+    BPT = 10
+
+    def _serve(self, spec: str, admission: str, combo_seed: int):
+        from repro.serving import PrefixCache, PrefixCacheConfig
+
+        cache = PrefixCache(PrefixCacheConfig(
+            capacity_bytes=16 * self.BLOCK * self.BPT, block_size=self.BLOCK,
+            bytes_per_token=self.BPT, policy=spec, admission=admission))
+        rng = np.random.default_rng([DIFF_SEED, combo_seed])
+        for i in range(400):
+            tmpl = int((rng.zipf(1.3) - 1) % 14)
+            length = (1 + tmpl % 4) * self.BLOCK
+            prompt = [tmpl * 1000 + j for j in range(length)]
+            cache.lookup(prompt + [10**6 + i])
+            cache.offer(prompt)
+        cache.sync()
+        return cache
+
+    def _assert_serving_identical(self, spec: str, combo_seed: int):
+        sync = self._serve(spec, "sync", combo_seed)
+        a = self._serve(spec, "async", combo_seed)
+        for k in ("request_hit_ratio", "token_hit_ratio", "byte_hit_ratio"):
+            assert getattr(sync, k) == getattr(a, k), f"{spec}: {k}"
+        assert set(sync.entries) == set(a.entries), f"{spec}: entries"
+        for f in ("accesses", "hits", "bytes_hit", "victims_examined",
+                  "admissions", "rejections", "evictions"):
+            assert getattr(sync.policy.stats, f) == getattr(a.policy.stats, f), (
+                f"{spec}: stats.{f}")
+        assert list(sync.policy.window.items()) == list(a.policy.window.items())
+        assert sync.policy.main.sizes == a.policy.main.sizes
+        assert sync.request_hit_ratio > 0, f"{spec}: degenerate regime"
+
+    @pytest.mark.parametrize("admission,eviction", ALL_COMBOS)
+    def test_host_plane_serving_identity(self, admission, eviction):
+        spec = f"wtlfu-{admission}-{eviction}?window_frac=0.1&seed={DIFF_SEED}"
+        self._assert_serving_identical(spec, _combo_key(admission, eviction))
+
+    @pytest.mark.parametrize("admission", ADMISSIONS)
+    def test_device_batched_serving_identity(self, admission):
+        spec = (f"wtlfu-{admission}-sampled_frequency?seed={DIFF_SEED}"
+                "&data_plane=device_batched&chunk=16&sketch_backend=cms")
+        self._assert_serving_identical(spec, 0x5E41 + _combo_key(admission, "d"))

@@ -39,6 +39,14 @@ in ``BENCH_overhead.json``:
   a one-time cost the paper's CPU-overhead comparison is not about;
   ``decision_batch_speedup`` is the headline number and the same hard
   hit-ratio equality check applies.
+* **Whole-simulation device plane** — ``data_plane=device_full`` (the
+  ENTIRE simulation step for a chunk of accesses in one ``lax.scan``:
+  window hits, recency updates, miss cascade, adaptive climber, with the
+  cache state device-resident between chunks) vs ``device_batched``
+  (which flushes speculation to the host on every main hit and resolves
+  prefix-main decisions one launch each). Same steady-state protocol and
+  hard hit-ratio equality check; ``whole_sim_speedup`` is the ISSUE 7
+  tentpole number.
 """
 
 from __future__ import annotations
@@ -86,6 +94,17 @@ DEVICE_BATCHED_POLICIES = (
     "wtlfu-qv-sampled_frequency",
     "wtlfu-av-sampled_frequency_size",
     "wtlfu-iv-random",
+)
+#: Specs for the whole-simulation comparison (ISSUE 7): the sampled mains
+#: where device_batched is at its best, PLUS the prefix mains (LRU/SLRU)
+#: it must resolve per decision — device_full keeps their recency order on
+#: device, so those rows isolate the tentpole win.
+DEVICE_FULL_POLICIES = (
+    "wtlfu-qv-sampled_frequency",
+    "wtlfu-av-sampled_frequency_size",
+    "wtlfu-iv-random",
+    "wtlfu-av-slru",
+    "wtlfu-iv-lru",
 )
 
 
@@ -235,6 +254,76 @@ def device_batched_rows(traces=("msr2",), frac=0.001,
     return rows
 
 
+def device_full_rows(traces=("msr2",), frac=0.001,
+                     limit=DEVICE_PLANE_LIMIT) -> list[dict]:
+    """Whole-simulation-on-device vs the decision-batched pipeline.
+
+    ``device_full`` resolves an entire access chunk — window hits,
+    recency updates, the miss cascade — in ONE ``lax.scan`` launch with
+    the cache state device-resident between chunks, where
+    ``device_batched`` flushes speculation to the host on every main hit
+    and resolves prefix-main (LRU/SLRU) decisions one launch each. Same
+    steady-state protocol as :func:`device_batched_rows` (untimed warm
+    run compiles every shape bucket, then the timed run measures pure
+    dispatch+execute); hit ratios must match exactly (hard ``raise``).
+    ``whole_sim_speedup`` = device_batched us/access over device_full
+    us/access — the tentpole number, largest on the prefix mains.
+    """
+    rows = []
+    for tname in traces:
+        tr = get_trace(tname)
+        cap = max(1, int(tr.total_object_bytes * frac))
+        ee = max(64, int(cap / max(1.0, tr.mean_object_size)))
+        for pol in DEVICE_FULL_POLICIES:
+            spec = PolicySpec.parse(pol)
+            pair = {}
+            for plane in ("device_batched", "device_full"):
+                sp = spec.with_params(data_plane=plane, sketch_backend="cms")
+                SimulationEngine().run(
+                    REGISTRY.build(sp, cap, expected_entries=ee), tr,
+                    limit=limit)  # warm jit
+                policy = REGISTRY.build(sp, cap, expected_entries=ee)
+                t0 = time.perf_counter()
+                res = SimulationEngine().run(policy, tr, limit=limit)
+                wall = time.perf_counter() - t0
+                st = res.stats
+                rp = {
+                    "policy": sp.to_string(),
+                    "trace": tr.name,
+                    "capacity": cap,
+                    "frac": frac,
+                    "accesses": st.accesses,
+                    "hit_ratio": round(st.hit_ratio, 5),
+                    "us_per_access": round(wall / max(1, st.accesses) * 1e6, 3),
+                    "wall_s": round(wall, 3),
+                    "data_plane": plane,
+                    "warmed": True,
+                }
+                if plane == "device_full":
+                    pipe = policy._device_pipeline
+                    rp.update(
+                        decisions=pipe.decisions,
+                        chunk_calls=pipe.chunk_calls,
+                        uploads=pipe.uploads,
+                        resyncs=pipe.resyncs,
+                    )
+                pair[plane] = rp
+                rows.append(rp)
+            if pair["device_full"]["hit_ratio"] != pair["device_batched"]["hit_ratio"]:
+                raise AssertionError(
+                    f"{pol}: device_full diverged from device_batched "
+                    f"({pair['device_full']['hit_ratio']} vs "
+                    f"{pair['device_batched']['hit_ratio']})"
+                )
+            pair["device_full"]["hit_ratio_matches_device_batched"] = True
+            pair["device_full"]["whole_sim_speedup"] = round(
+                pair["device_batched"]["us_per_access"]
+                / max(1e-9, pair["device_full"]["us_per_access"]),
+                3,
+            )
+    return rows
+
+
 def main(traces=PAPER_TRACES, fracs=FRACS) -> list[dict]:
     rows = []
     for tname in traces:
@@ -270,6 +359,7 @@ def main(traces=PAPER_TRACES, fracs=FRACS) -> list[dict]:
                 )
     rows.extend(device_plane_rows())
     rows.extend(device_batched_rows())
+    rows.extend(device_full_rows())
     rows.extend(sketch_data_plane_rows())
     emit("overhead", rows, derived_key="overhead_us")
     return rows

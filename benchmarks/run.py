@@ -14,17 +14,23 @@ machine-readable without parsing the full
 as an artifact). Stable schema::
 
     {"schema": 2,
-     "history": [{"timestamp": "<UTC ISO-8601 | null>", "rows": [...]}]}
+     "history": [{"timestamp": "<UTC ISO-8601>", "rows": [...]}]}
 
 Legacy single-run files (a bare row list, schema 1) are migrated in place
-as one undated entry; history is capped at the most recent
-``BENCH_HISTORY_MAX`` entries.
+as one entry; entries persisted without a timestamp are backfilled from
+the file's mtime on load, so every entry is dated. History is capped at
+the most recent ``BENCH_HISTORY_MAX`` entries. Each append compares its
+rows against the trajectory baseline: a >15% accesses/sec drop for any
+``(policy, data_plane, trace, capacity)`` row flags the row in the
+written entry and — under ``REPRO_BENCH_STRICT=1`` (the nightly bench
+jobs) — fails the run.
 """
 
 from __future__ import annotations
 
 import datetime
 import json
+import os
 import pathlib
 import sys
 import time
@@ -34,30 +40,121 @@ BENCH_OVERHEAD_PATH = _ROOT / "BENCH_overhead.json"
 BENCH_SERVING_PATH = _ROOT / "BENCH_serving.json"
 #: Trajectory length cap: nightly appends one entry per run.
 BENCH_HISTORY_MAX = 180
+#: Fractional accesses/sec drop (vs the most recent prior run of the same
+#: row) that flags a perf regression in the appended entry.
+BENCH_REGRESSION_TOLERANCE = 0.15
+
+
+def _utc_stamp(epoch: "float | None" = None) -> str:
+    """UTC ISO-8601 with second precision, e.g. ``2026-08-08T12:00:00+00:00``."""
+    dt = (datetime.datetime.now(datetime.timezone.utc) if epoch is None
+          else datetime.datetime.fromtimestamp(epoch, datetime.timezone.utc))
+    return dt.isoformat(timespec="seconds")
 
 
 def _load_bench_history(path: pathlib.Path) -> "list[dict]":
     try:
         with open(path) as f:
             prior = json.load(f)
+        mtime = path.stat().st_mtime
     except (OSError, ValueError):
         return []
     if isinstance(prior, list):  # schema 1: one overwritten row list
-        return [{"timestamp": None, "rows": prior}] if prior else []
-    if isinstance(prior, dict) and isinstance(prior.get("history"), list):
-        return prior["history"]
-    return []
+        history = [{"timestamp": None, "rows": prior}] if prior else []
+    elif isinstance(prior, dict) and isinstance(prior.get("history"), list):
+        history = prior["history"]
+    else:
+        return []
+    # Entries written before timestamps existed (and schema-1 migrations)
+    # carry ``null``: backfill from the file's last-modified time so every
+    # persisted entry is dated — the regression gate needs a real ordering.
+    for entry in history:
+        if isinstance(entry, dict) and entry.get("timestamp") is None:
+            entry["timestamp"] = _utc_stamp(mtime)
+    return history
+
+
+#: Throughput metrics the regression gate understands, in lookup order
+#: (overhead rows carry the first, serving rows the second).
+_GATED_METRICS = ("accesses_per_sec", "requests_per_sec")
+
+
+def _row_key(r: dict) -> tuple:
+    return tuple(r.get(k) for k in ("policy", "data_plane", "admission",
+                                    "arch", "trace", "capacity"))
+
+
+def _row_metric(r: dict) -> "tuple[str, float] | None":
+    for m in _GATED_METRICS:
+        v = r.get(m)
+        if v:
+            return m, v
+    return None
+
+
+def _flag_regressions(history: "list[dict]") -> "list[dict]":
+    """Compare the newest entry's rows against the most recent prior run
+    of the same ``(policy, data_plane, ...)`` row. A
+    ``> BENCH_REGRESSION_TOLERANCE`` throughput drop gets a visible
+    ``"regression"`` marker on the row (and a ``"regressions"`` count on
+    the entry) — the append-only log is an enforced perf contract, not
+    just a record. Returns the flagged rows."""
+    if len(history) < 2:
+        return []
+    baseline: "dict[tuple, tuple]" = {}
+    for entry in history[:-1]:
+        for r in entry.get("rows", ()):
+            metric = _row_metric(r)
+            if r.get("policy") and metric:
+                baseline[_row_key(r)] = (metric[1], entry.get("timestamp"))
+    flagged = []
+    new = history[-1]
+    for r in new.get("rows", ()):
+        metric = _row_metric(r)
+        base = baseline.get(_row_key(r))
+        if metric is None or base is None:
+            continue
+        name, value = metric
+        base_value, base_ts = base
+        change = value / base_value - 1.0
+        if change < -BENCH_REGRESSION_TOLERANCE:
+            r["regression"] = {
+                f"baseline_{name}": base_value,
+                "baseline_timestamp": base_ts,
+                "change": round(change, 4),
+            }
+            flagged.append(r)
+    if flagged:
+        new["regressions"] = len(flagged)
+    return flagged
 
 
 def _append_trajectory(path: pathlib.Path, rows: "list[dict]") -> None:
     """Append one dated entry of condensed rows to a schema-2 trajectory
-    file, capping history at BENCH_HISTORY_MAX entries."""
+    file, capping history at BENCH_HISTORY_MAX entries. Rows regressing
+    >15% vs their trajectory baseline are flagged in the written entry;
+    with ``REPRO_BENCH_STRICT`` set, flagged rows also fail the run
+    (after persisting the entry, so the marker is never lost)."""
     history = _load_bench_history(path)
-    stamp = datetime.datetime.now(datetime.timezone.utc).isoformat(timespec="seconds")
-    history.append({"timestamp": stamp, "rows": rows})
+    history.append({"timestamp": _utc_stamp(), "rows": rows})
     history = history[-BENCH_HISTORY_MAX:]
+    flagged = _flag_regressions(history)
     with open(path, "w") as f:
         json.dump({"schema": 2, "history": history}, f, indent=1)
+    for r in flagged:
+        reg = r["regression"]
+        base = {k: v for k, v in reg.items()
+                if k.startswith("baseline_") and k != "baseline_timestamp"}
+        print(
+            f"# PERF REGRESSION {r.get('policy')}/{r.get('data_plane')} on "
+            f"{r.get('trace')}: {reg['change']:+.1%} vs {base} "
+            f"({reg['baseline_timestamp']})",
+            file=sys.stderr, flush=True)
+    if flagged and os.environ.get("REPRO_BENCH_STRICT"):
+        raise SystemExit(
+            f"{len(flagged)} benchmark row(s) regressed "
+            f">{BENCH_REGRESSION_TOLERANCE:.0%} vs the {path.name} "
+            "trajectory baseline (rows are flagged in the appended entry)")
 
 
 def write_bench_overhead(rows: "list[dict]") -> None:

@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""Tier-1 CI smoke row for the whole-simulation-on-device data plane.
+
+Fast end-to-end check (one workload-shift trace, one spec) that
+``device_full``
+
+* builds from a spec string and resolves the CMS backend,
+* resolves whole chunks in single ``lax.scan`` launches with the cache
+  state device-resident between chunks (no per-decision dispatches,
+  one host upload between resyncs), and
+* stays byte-identical to the scalar reference plane across the shift.
+
+Exits non-zero on any divergence; prints a one-line summary row. The
+exhaustive five-way 21-combo grid runs in the test suite — this is the
+cheap always-on canary wired into ``.github/workflows/ci.yml``.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.core import REGISTRY, HitMaskRecorder, SimulationEngine
+from repro.traces import make_trace
+
+SPEC = "wtlfu-av-slru?sketch_backend=cms&seed=0x5EED"
+
+
+def main() -> int:
+    # a workload-shift trace: the popularity/size regime change stresses
+    # window churn, SLRU promotion, and eviction pressure mid-run
+    tr = make_trace("shift1", seed=9, scale=0.0015)
+    cap = max(1, int(tr.total_object_bytes * 0.02))
+    ee = max(64, int(cap / tr.mean_object_size))
+    runs = {}
+    for plane in ("scalar", "device_full"):
+        p = REGISTRY.build(SPEC, cap, data_plane=plane, expected_entries=ee,
+                           chunk=64)
+        rec = HitMaskRecorder()
+        t0 = time.perf_counter()
+        SimulationEngine(instruments=(rec,)).run(p, tr)
+        runs[plane] = (p, rec.hits, time.perf_counter() - t0)
+    (a, ha, _), (b, hb, wall) = runs["scalar"], runs["device_full"]
+    b.sync_deferred()  # restore host authority before content compares
+    if not (ha == hb).all():
+        print("FAIL: hit/miss streams diverge", file=sys.stderr)
+        return 1
+    for field in ("accesses", "hits", "bytes_hit", "victims_examined",
+                  "admissions", "rejections", "evictions"):
+        if getattr(a.stats, field) != getattr(b.stats, field):
+            print(f"FAIL: stats.{field} diverges", file=sys.stderr)
+            return 1
+    if a.main.sizes != b.main.sizes:
+        print("FAIL: final cache contents diverge", file=sys.stderr)
+        return 1
+    if list(a.window.items()) != list(b.window.items()):
+        print("FAIL: window contents diverge", file=sys.stderr)
+        return 1
+    pipe = b._device_pipeline
+    if pipe.decisions < 50:
+        print(f"FAIL: only {pipe.decisions} decisions — trace too small",
+              file=sys.stderr)
+        return 1
+    # Per-decision kernel dispatches may only happen while host authority
+    # is restored after a sketch aging reset (the single replayed boundary
+    # access can trigger a handful of admission decisions); everything else
+    # must resolve inside the chunk scans.
+    if b.admission_policy._device.calls > 4 * pipe.resync_reasons["aging"]:
+        print(
+            f"FAIL: {b.admission_policy._device.calls} per-decision "
+            f"dispatches for {pipe.resync_reasons['aging']} aging resyncs — "
+            "the chunk scan is not resolving everything", file=sys.stderr)
+        return 1
+    if pipe.uploads > 1 + pipe.resyncs + 1:  # initial + one per host resync
+        print(f"FAIL: {pipe.uploads} uploads for {pipe.resyncs} resyncs — "
+              "state is not staying device-resident", file=sys.stderr)
+        return 1
+    print(
+        f"smoke-device-full OK: {SPEC} decisions={pipe.decisions} "
+        f"launches={pipe.chunk_calls} uploads={pipe.uploads} "
+        f"resyncs={pipe.resyncs} accesses/s={a.stats.accesses / wall:.0f}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -156,6 +156,22 @@ class EvictionPolicy:
         """
         return self.iter_victims(needed)
 
+    # -- whole-table snapshot exchange (the device_full plane) -----------
+    def export_rows(self) -> "list[tuple[int, int, int]]":
+        """``(key, size, segment)`` rows in the policy's canonical order —
+        the upload view of the ``data_plane="device_full"`` simulation
+        plane (see :mod:`repro.kernels.device_full`). Ordered policies
+        emit recency order (stamp order on device); slot-addressed ones
+        emit slot order (draw indexes address slots). ``segment`` is 0
+        except for SLRU's protected entries."""
+        raise NotImplementedError
+
+    def load_rows(self, rows: "list[tuple[int, int, int]]") -> None:
+        """Rebuild the policy in place from :meth:`export_rows`-shaped
+        rows (the device_full download path): same order contract as
+        :meth:`export_rows`. Replaces all current entries."""
+        raise NotImplementedError
+
 
 class LRUEviction(EvictionPolicy):
     """Plain LRU: victims from the least-recently-used end."""
@@ -185,6 +201,16 @@ class LRUEviction(EvictionPolicy):
         # Walk the order dict live: O(pulled), where iter_victims copies the
         # whole order (O(n)) before yielding the first victim.
         return iter(self.order)
+
+    def export_rows(self):
+        return [(k, self.sizes[k], 0) for k in self.order]
+
+    def load_rows(self, rows) -> None:
+        # rows arrive in recency order (LRU first), the iteration order of
+        # ``self.order``; segments are ignored.
+        self.sizes = {k: s for k, s, _ in rows}
+        self.used = sum(s for _, s, _ in rows)
+        self.order = OrderedDict((k, None) for k, _, _ in rows)
 
 
 class SLRUEviction(EvictionPolicy):
@@ -250,6 +276,29 @@ class SLRUEviction(EvictionPolicy):
     def _peek_iter(self, needed: int) -> Iterator[int]:
         yield from self.probation
         yield from self.protected
+
+    def export_rows(self):
+        return [(k, self.sizes[k], 0) for k in self.probation] + [
+            (k, self.sizes[k], 1) for k in self.protected
+        ]
+
+    def load_rows(self, rows) -> None:
+        # rows arrive in global recency order with per-entry segments; the
+        # within-segment order is each segment dict's LRU->MRU order (a
+        # global recency sort preserves it, so one pass splits correctly).
+        self.sizes = {}
+        self.used = 0
+        self.probation = OrderedDict()
+        self.protected = OrderedDict()
+        self.protected_bytes = 0
+        for k, s, seg in rows:
+            self.sizes[k] = s
+            self.used += s
+            if seg:
+                self.protected[k] = None
+                self.protected_bytes += s
+            else:
+                self.probation[k] = None
 
 
 class SampledEviction(EvictionPolicy):
@@ -437,6 +486,21 @@ class SampledEviction(EvictionPolicy):
         # Live view — callers must finish pulling before mutating, so the
         # slots match the snapshot iter_victims would have taken.
         return self._walk(self.keys, needed)
+
+    def export_rows(self):
+        # Slot order, not recency: the counter-RNG draws address slots, so
+        # the device twin must reproduce the swap-remove list exactly.
+        return [(k, self.sizes[k], 0) for k in self.keys]
+
+    def load_rows(self, rows) -> None:
+        self.sizes = {k: s for k, s, _ in rows}
+        self.used = sum(s for _, s, _ in rows)
+        self.keys = [k for k, _, _ in rows]
+        self.pos = {k: i for i, k in enumerate(self.keys)}
+        if self._mirror is not None:
+            load = getattr(self._mirror, "load", None)
+            if load is not None:
+                load(self.keys, self.sizes)
 
 
 class RandomEviction(SampledEviction):

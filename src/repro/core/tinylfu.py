@@ -53,7 +53,8 @@ EVICTIONS = (
 )
 
 SKETCH_BACKENDS = ("auto", "host", "cms")
-DATA_PLANES = ("auto", "batched", "scalar", "device", "device_batched")
+DATA_PLANES = (
+    "auto", "batched", "scalar", "device", "device_batched", "device_full")
 
 
 def _wtlfu_alias(name: str) -> dict | None:
@@ -150,7 +151,7 @@ class SizeAwareWTinyLFU:
             raise ValueError(f"sketch_backend must be one of {SKETCH_BACKENDS}")
         if data_plane not in DATA_PLANES:
             raise ValueError(f"data_plane must be one of {DATA_PLANES}")
-        device_plane = data_plane in ("device", "device_batched")
+        device_plane = data_plane in ("device", "device_batched", "device_full")
         if sketch_backend == "auto":
             sketch_backend = "cms" if device_plane else "host"
         if device_plane and sketch_backend != "cms":
@@ -213,13 +214,23 @@ class SizeAwareWTinyLFU:
         self._device_pipeline = None
         if device_plane:
             self.admission_policy.bind_device_plane(self.main)
-            self._device_pipeline = self.admission_policy.bind_device_batch_plane(
-                self.main, chunk=chunk)
-            self._admit = (
-                self.admission_policy.admit_device_batch
-                if data_plane == "device_batched"
-                else self.admission_policy.admit_device
-            )
+            if data_plane == "device_full":
+                from repro.kernels.device_full import DeviceFullSimulationPlane
+
+                # the whole simulation step runs in the chunk scan; scalar
+                # ``access`` (the host-resync fallback path) decides through
+                # the per-decision device plane
+                self._device_pipeline = DeviceFullSimulationPlane(
+                    self.admission_policy._device, chunk=chunk)
+                self._admit = self.admission_policy.admit_device
+            else:
+                self._device_pipeline = self.admission_policy.bind_device_batch_plane(
+                    self.main, chunk=chunk)
+                self._admit = (
+                    self.admission_policy.admit_device_batch
+                    if data_plane == "device_batched"
+                    else self.admission_policy.admit_device
+                )
         elif data_plane == "batched":
             self._admit = self.admission_policy.admit
         else:
@@ -228,6 +239,11 @@ class SizeAwareWTinyLFU:
 
     # -- introspection -----------------------------------------------------
     def __contains__(self, key: int) -> bool:
+        pipe = self._device_pipeline
+        if pipe is not None and pipe.needs_host_sync:
+            # a deferred chunk (or, under device_full, device-authoritative
+            # state) could flip membership: resolve before answering
+            pipe.sync(self)
         return key in self.window or key in self.main
 
     def used_bytes(self) -> int:
@@ -259,6 +275,12 @@ class SizeAwareWTinyLFU:
 
     # -- hot path ------------------------------------------------------------
     def access(self, key: int, size: int) -> bool:
+        pipe = self._device_pipeline
+        if pipe is not None and pipe.needs_host_sync:
+            # scalar access reads/mutates the host dicts: restore host
+            # authority first (device_full leaves it on device between
+            # chunks; device_batched may hold deferred decisions)
+            pipe.sync(self)
         st = self.stats
         st.accesses += 1
         st.bytes_requested += size

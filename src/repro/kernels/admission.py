@@ -70,6 +70,7 @@ through the same int32 hash-input truncation as ``CMSSketch``.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -79,6 +80,12 @@ from repro.core import crng
 
 from .cms.ops import _mix64_u32, _mul64_const, flush_scores
 from .cms.ref import row_indexes
+
+# Buffer donation is a no-op off-accelerator; silence the one warning
+# XLA:CPU emits per launch so CPU test runs stay clean.
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable", category=UserWarning
+)
 
 __all__ = [
     "DeviceAdmissionPlane",
@@ -435,6 +442,11 @@ def _apply_verdict(mkeys, msizes, n, used, victims, n_evict, admit, cand, size, 
     jax.jit,
     static_argnames=("discipline", "rule", "sample", "early_pruning", "cap",
                      "use_pallas", "interpret", "vcap"),
+    # steady-state chunks update the same sketch/mirror state they read:
+    # donating those buffers lets XLA alias them in place of a fresh
+    # allocation per launch (the dispatch path adopts the outputs
+    # immediately, so the stale inputs are never touched again)
+    donate_argnums=(0, 1, 2),
 )
 def _decide_sampled_chunk(table, mkeys, msizes, wr, upd, meta, scal, key_limbs,
                           *, discipline, rule, sample, early_pruning, cap,
@@ -963,6 +975,11 @@ class DeviceBatchedAdmissionPlane:
         """True while decisions are queued or a chunk is in flight."""
         return bool(self._queue) or self._inflight is not None
 
+    #: the owning policy consults this before host-structure reads (scalar
+    #: ``access``, ``__contains__``); this plane never lets host structures
+    #: go stale beyond the deferred decisions, so the two are the same
+    needs_host_sync = has_deferred_work
+
     def sync(self, pol) -> None:
         """Resolve every deferred decision — queued and in flight. After
         this, host structures and ``pol.stats`` are exact."""
@@ -1183,6 +1200,12 @@ class DeviceBatchedAdmissionPlane:
             use_pallas=sk.use_pallas, interpret=dev._interpret,
             vcap=self.victim_cap)
         self.chunk_calls += 1
+        # adopt the (async) output buffers NOW: the inputs were donated to
+        # the launch and must not be read again. The scan masks segment
+        # flushes and mirror writes past a poisoned decision, so the
+        # adopted arrays are exact regardless of where the ok-prefix ends.
+        sk.table = table
+        self.mirror.accept(mkeys, msizes)
         return _InFlightChunk(q=q, b_last=b_last, table=table, mkeys=mkeys,
                               msizes=msizes, out=out, victims=victims)
 
@@ -1205,13 +1228,13 @@ class DeviceBatchedAdmissionPlane:
         # commit the sketch through the last in-kernel-flushed segment: the
         # ok-prefix plus, when poisoned, the overflowing decision's own
         applied_b = q[okn][2] if okn < nq else inf.b_last
-        sk.table = inf.table
+        # sketch table + mirror arrays were adopted at dispatch (the launch
+        # donated the old buffers); commit the host-side flush accounting,
+        # then replay the verdict vector on the host structures with
+        # dirty-marking suppressed (the scan already performed these exact
+        # slot writes)
         sk._ops += applied_b
         sk._pending = sk._pending[applied_b:]
-        # adopt the post-scan mirror arrays, then replay the verdict vector
-        # on the host structures with dirty-marking suppressed (the scan
-        # already performed these exact slot writes)
-        self.mirror.accept(mkeys, msizes)
         victims = np.asarray(victims)
         st = pol.stats
         self.mirror.begin_applied()

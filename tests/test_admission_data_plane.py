@@ -665,6 +665,207 @@ class TestDeviceBatchedPlane:
                     _assert_mirror_synced(p, f"{plane} chunk at {lo}")
 
 
+class TestDeviceFullPlane:
+    """ISSUE 7: the whole-simulation-on-device plane — one ``lax.scan``
+    launch per chunk resolves window hits, recency updates, the miss
+    cascade, and the adaptive climber with the cache state device-resident
+    between launches (byte-identity lives in the five-way differential
+    suite; this class covers the plane mechanics: residency, donation
+    adoption, host-sync guards, and the serving defer surface)."""
+
+    def _trace(self, seed=5, scale=0.0015):
+        tr = make_trace("msr2", seed=seed, scale=scale)
+        cap = max(1, int(tr.total_object_bytes * 0.02))
+        return tr, cap, max(64, int(cap / tr.mean_object_size))
+
+    def test_plane_resolution_and_spec_round_trip(self):
+        from repro.core import PolicySpec
+
+        spec = PolicySpec.parse(
+            "wtlfu-av-slru?data_plane=device_full&chunk=32&seed=0xA11CE")
+        assert PolicySpec.parse(spec.to_string()) == spec
+        p = REGISTRY.build(spec, 10_000, expected_entries=64)
+        assert p.data_plane == "device_full"
+        assert p.sketch_backend == "cms"  # implied, like the other device planes
+        assert p._device_pipeline.chunk == 32
+        assert p._device_pipeline.main_kind == "slru"
+        with pytest.raises(ValueError, match="cms"):
+            SizeAwareWTinyLFU(10_000, expected_entries=64,
+                              data_plane="device_full", sketch_backend="host")
+        with pytest.raises(ValueError, match="chunk"):
+            SizeAwareWTinyLFU(10_000, expected_entries=64,
+                              data_plane="device_full", chunk=0)
+
+    def test_one_launch_per_chunk_device_resident(self):
+        """Acceptance: a steady-state run resolves every access — window
+        hits and LRU/SLRU main hits included — in exactly one launch per
+        chunk, with ONE host->device upload for the whole run, zero
+        per-decision kernel dispatches, and zero resyncs."""
+        rng = np.random.default_rng(23)
+        n = 1280
+        keys = ((rng.zipf(1.2, size=n) - 1) % 40).astype(np.int64)
+        sizes = np.asarray([10 + (int(k) * 11) % 60 for k in keys], np.int64)
+        for eviction, kind in (("lru", "lru"), ("slru", "slru"),
+                               ("sampled_frequency", "sampled")):
+            p = REGISTRY.build(
+                f"wtlfu-av-{eviction}?data_plane=device_full&chunk=64",
+                900, expected_entries=256)
+            pipe = p._device_pipeline
+            assert pipe.main_kind == kind
+            # warm up: the first launches size the mirror from an empty
+            # cache and may grow it once as the live set fills
+            for lo in range(0, 256, 64):
+                p.access_batch(keys[lo:lo + 64], sizes[lo:lo + 64])
+            p.sync_deferred()  # re-upload next launch with settled sizes
+            uploads0, calls0 = pipe.uploads, pipe.chunk_calls
+            resyncs0 = pipe.resyncs
+            for lo in range(256, n, 64):
+                p.access_batch(keys[lo:lo + 64], sizes[lo:lo + 64])
+            assert pipe.chunk_calls - calls0 == (n - 256) // 64, eviction
+            assert pipe.uploads == uploads0 + 1, \
+                f"{eviction}: host re-upload mid-steady-state"
+            assert pipe.resyncs == resyncs0, eviction
+            assert pipe.decisions > 0, eviction
+            # zero per-decision host round-trips: the per-decision device
+            # plane (the resync path) never dispatched
+            assert p.admission_policy._device.calls == 0, eviction
+            assert p.stats.hits > 0, f"{eviction}: hit path never exercised"
+
+    def test_donated_buffers_adopted_identity(self):
+        """ISSUE 7 satellite: the scan entry point donates the packed
+        state buffers, and the plane adopts the launch outputs immediately
+        — the sketch table and every mirror array the plane holds must BE
+        the launch's output objects (no host copy, no re-allocation)."""
+        from repro.kernels import device_full as df
+
+        recorded = []
+        real = df._simulate_chunk
+
+        def recording(*args, **kw):
+            outs = real(*args, **kw)
+            recorded.append(outs)
+            return outs
+
+        p = REGISTRY.build(
+            "wtlfu-qv-sampled_frequency?data_plane=device_full&chunk=32",
+            800, expected_entries=64)
+        rng = np.random.default_rng(3)
+        keys = ((rng.zipf(1.3, size=96) - 1) % 30).astype(np.int64)
+        sizes = np.asarray([12 + (int(k) * 7) % 50 for k in keys], np.int64)
+        try:
+            df._simulate_chunk = recording
+            p.access_batch(keys, sizes)
+        finally:
+            df._simulate_chunk = real
+        assert recorded, "simulation kernel never launched"
+        outs = recorded[-1]
+        pipe = p._device_pipeline
+        assert p.sketch.table is outs[0], "sketch table was copied, not adopted"
+        for got, want in zip(pipe.mirror.main, outs[1:6]):
+            assert got is want, "mirror main array was copied, not adopted"
+        for got, want in zip(pipe.mirror.window, outs[6:10]):
+            assert got is want, "mirror window array was copied, not adopted"
+
+    def test_device_batched_dispatch_adopts_donated_buffers(self):
+        """ISSUE 7 satellite (device_batched side): `_decide_sampled_chunk`
+        donates (table, mkeys, msizes); the pipeline must adopt the launch
+        outputs at DISPATCH time — by collect the stale inputs are gone."""
+        from repro.kernels import admission as adm
+
+        recorded = []
+        real = adm._decide_sampled_chunk
+
+        def recording(*args, **kw):
+            outs = real(*args, **kw)
+            recorded.append(outs)
+            return outs
+
+        # huge sketch sample (no aging), all-distinct keys (no visibility
+        # flushes): decisions buffer and resolve only through chunk
+        # launches. defer_collect leaves the trailing launch in flight, so
+        # dispatch-time adoption is observable before any collect.
+        p = SizeAwareWTinyLFU(
+            800, admission="qv", eviction="sampled_frequency",
+            data_plane="device_batched", chunk=8, expected_entries=64,
+            sketch_kwargs={"sample_factor": 10_000})
+        pipe = p.admission_policy._device_batch
+        pipe.defer_collect = True
+        fresh = iter(range(10 ** 6))
+        try:
+            adm._decide_sampled_chunk = recording
+            for _ in range(20):
+                ks = np.asarray([next(fresh) for _ in range(12)], np.int64)
+                p.access_batch(ks, np.full(12, 30, np.int64))
+                if pipe._inflight is not None:
+                    break
+        finally:
+            adm._decide_sampled_chunk = real
+        assert pipe._inflight is not None, "no trailing chunk stayed in flight"
+        assert recorded, "chunk kernel never launched"
+        table, mkeys, msizes = recorded[-1][:3]
+        assert p.sketch.table is table, "table adopted only at collect"
+        assert pipe.mirror._dev[0] is mkeys
+        assert pipe.mirror._dev[1] is msizes
+        pipe.sync(p)  # settle before teardown
+
+    def test_host_sync_guards_restore_authority(self):
+        """Scalar ``access`` and ``__contains__`` between chunked drives
+        must transparently restore host authority (download + rebuild) and
+        stay byte-identical to a pure-scalar replay."""
+        rng = np.random.default_rng(11)
+        keys = ((rng.zipf(1.2, size=420) - 1) % 32).astype(np.int64).tolist()
+        sizes = [10 + (k * 13) % 70 for k in keys]
+        spec = "wtlfu-av-slru?sketch_backend=cms"
+        a = REGISTRY.build(spec, 700, data_plane="scalar", expected_entries=64)
+        ha = [a.access(k, s) for k, s in zip(keys, sizes)]
+        e = REGISTRY.build(spec, 700, data_plane="device_full",
+                           expected_entries=64, chunk=16)
+        he = []
+        # interleave chunk drives with scalar accesses and membership reads
+        i = 0
+        while i < len(keys):
+            take = 48 if (i // 48) % 2 == 0 else 5
+            block_k, block_s = keys[i:i + take], sizes[i:i + take]
+            if take == 5:  # scalar path: forces ensure_host via the guard
+                he.extend(e.access(k, s) for k, s in zip(block_k, block_s))
+                assert not e._device_pipeline.has_deferred_work
+            else:
+                he.extend(bool(h) for h in e.access_batch(
+                    np.asarray(block_k, np.int64), np.asarray(block_s, np.int64)))
+                # membership read mid-run: the guard must sync first (the
+                # answer itself is validated by the final byte-identity)
+                probe = block_k[0]
+                probe in e
+                assert not e._device_pipeline.has_deferred_work
+            i += take
+        e.sync_deferred()
+        _assert_byte_identical(a, e, np.asarray(ha), np.asarray(he),
+                               "host-sync guards")
+
+    def test_serving_defer_collect_double_buffers(self):
+        """The serving async pipeline drives device_full unchanged through
+        the shared plane surface: whole-chunk drains stay in flight on
+        device (``deferred_dispatches``) and sync() settles them."""
+        from repro.serving.admission import AsyncAdmissionPipeline
+
+        p = REGISTRY.build(
+            "wtlfu-qv-sampled_frequency?data_plane=device_full&chunk=32",
+            5_000, expected_entries=64)
+        pipe = AsyncAdmissionPipeline(p)
+        assert p._device_pipeline.defer_collect is True
+        assert pipe.queue_chunk == 32
+        rng = np.random.default_rng(7)
+        for i in range(256):
+            k = int(rng.integers(0, 48))
+            pipe.offer(k, 40 + k % 50)
+        pipe.sync()
+        plane = p._device_pipeline
+        assert plane.deferred_dispatches > 0, "defer path never engaged"
+        assert not plane.has_deferred_work
+        m = pipe.metrics()
+        assert m["decisions"] == plane.decisions
+
+
 class TestFusedSketchPath:
     def _drive(self, fused: bool):
         from repro.core.cms_sketch import CMSSketch

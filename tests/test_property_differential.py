@@ -10,6 +10,12 @@ CMS backend) must match both host planes over the same 21-combo grid.
 ISSUE 5 extends it four ways: ``data_plane="device_batched"`` (decision
 chunks per launch, driven through ``access_batch`` so the buffering
 engages) must match too — decisions, stats, contents, fallback counters.
+ISSUE 7 extends it five ways: ``data_plane="device_full"`` (the WHOLE
+simulation step — window hits, recency updates, miss cascade, adaptive
+climber — in one ``lax.scan`` per chunk, cache state device-resident
+between chunks) must match on decisions, stats, final contents, window
+occupancy, and the adaptive ``window_cap`` trajectory, with host resyncs
+only on sketch aging resets and mirror growth (both test-forced below).
 
 Four layers:
 
@@ -160,7 +166,7 @@ class TestDeviceSeededGrid:
     reseedable via ``REPRO_DIFF_SEED``."""
 
     @pytest.mark.parametrize("admission,eviction", ALL_COMBOS)
-    def test_four_planes_byte_identical(self, admission, eviction):
+    def test_five_planes_byte_identical(self, admission, eviction):
         rng = np.random.default_rng([DIFF_SEED, 0xDE1CE, _combo_key(admission, eviction)])
         keys, sizes = _synth_trace(rng, n=220, key_space=32, size_mode="uniform")
         cap = max(120, int(np.mean(sizes) * 8))
@@ -172,16 +178,22 @@ class TestDeviceSeededGrid:
         ]
         out.append(_run_plane_chunked(spec, cap, keys, sizes, "device_batched",
                                       expected_entries=64, chunk=4))
-        (a, ha), (b, hb), (c, hc), (d, hd) = out
+        out.append(_run_plane_chunked(spec, cap, keys, sizes, "device_full",
+                                      expected_entries=64, chunk=4))
+        (a, ha), (b, hb), (c, hc), (d, hd), (e, he) = out
         _assert_identical(a, b, ha, hb, f"{spec} scalar-vs-batched")
         _assert_identical(a, c, ha, hc, f"{spec} scalar-vs-device")
         _assert_identical(a, d, ha, hd, f"{spec} scalar-vs-device_batched")
+        e.sync_deferred()  # restore host authority before content compares
+        _assert_identical(a, e, ha, he, f"{spec} scalar-vs-device_full")
         assert a.stats.evictions > 0, f"{spec}: trace never evicted"
         if eviction not in ("lru", "slru"):
             assert a.main.fallback_scans == c.main.fallback_scans, \
                 f"{spec}: device fallback-scan count diverges"
             assert a.main.fallback_scans == d.main.fallback_scans, \
                 f"{spec}: device_batched fallback-scan count diverges"
+            assert a.main.fallback_scans == e.main.fallback_scans, \
+                f"{spec}: device_full fallback-scan count diverges"
 
     @pytest.mark.parametrize("eviction", ("sampled_frequency", "slru"))
     def test_device_pallas_branch_matches_scalar(self, eviction):
@@ -221,6 +233,121 @@ class TestDeviceSeededGrid:
         assert a.sketch.resets > 0, "trace too short to age the sketch"
         assert a.sketch.resets == c.sketch.resets
         _assert_identical(a, c, ha, hc, f"{spec} across resets")
+
+
+class TestDeviceFullResyncs:
+    """ISSUE 7: device_full keeps the cache state device-resident; the only
+    host resyncs are sketch aging resets and mirror growth. Both are forced
+    here, counted, and shown not to break identity — and the adaptive
+    climber + SLRU promotion run INSIDE the scan (the ``window_cap``
+    trajectory and protected-segment contents must replay exactly)."""
+
+    def _caps_run(self, spec, cap, keys, sizes, plane, *, chunk=None, **kw):
+        """Chunked drive recording ``window_cap`` after every chunk (for
+        device_full those scalars commit at collect — no host sync)."""
+        build_kw = dict(kw)
+        if chunk is not None:
+            build_kw["chunk"] = chunk
+        p = REGISTRY.build(spec, cap, data_plane=plane, **build_kw)
+        hits, caps = [], []
+        ka = np.asarray(keys, dtype=np.int64)
+        sa = np.asarray(sizes, dtype=np.int64)
+        for lo in range(0, len(ka), 64):
+            hits.extend(bool(h) for h in p.access_batch(ka[lo:lo + 64],
+                                                        sa[lo:lo + 64]))
+            caps.append(p.window_cap)
+        return p, hits, caps
+
+    @pytest.mark.parametrize("admission,eviction",
+                             [("av", "slru"), ("qv", "sampled_frequency"),
+                              ("iv", "lru")])
+    def test_adaptive_window_cap_trajectory(self, admission, eviction):
+        """A high-miss trace fires the in-scan hill-climber repeatedly; the
+        per-chunk ``window_cap`` trajectory (and everything downstream of
+        the re-split: drains, decisions, contents) must match scalar."""
+        rng = np.random.default_rng([DIFF_SEED, 0xADA, _combo_key(admission, eviction)])
+        n = 2600
+        keys = ((rng.zipf(1.05, size=n) - 1) % 2000).astype(np.int64).tolist()
+        sizes = rng.integers(4, 40, size=n).astype(np.int64).tolist()
+        spec = (f"wtlfu-{admission}-{eviction}?window_frac=0.05"
+                f"&seed={DIFF_SEED}&sketch_backend=cms&adaptive_window=1")
+        a, ha, caps_a = self._caps_run(spec, 3000, keys, sizes, "scalar",
+                                       expected_entries=64)
+        e, he, caps_e = self._caps_run(spec, 3000, keys, sizes, "device_full",
+                                       chunk=64, expected_entries=64)
+        assert len(set(caps_a)) >= 2, "trace never moved the window: weak test"
+        assert caps_a == caps_e, f"{spec}: window_cap trajectory diverges"
+        e.sync_deferred()
+        _assert_identical(a, e, ha, he, f"{spec} adaptive")
+        assert (a.window_cap, a.main_cap) == (e.window_cap, e.main_cap)
+        assert a._adapt_accesses == e._adapt_accesses
+        assert a._adapt_dir == e._adapt_dir
+        assert a._adapt_prev_hits == e._adapt_prev_hits
+        assert a._adapt_prev_ratio == e._adapt_prev_ratio
+
+    def test_slru_promotion_and_segments(self):
+        """SLRU main-hit promotion (probation -> protected, with
+        protected-overflow demotion) happens in-scan; the per-entry segment
+        assignment and protected byte count must replay exactly."""
+        rng = np.random.default_rng([DIFF_SEED, 0x51F0])
+        # narrow keyspace => plenty of main hits => promotions + demotions
+        keys, sizes = _synth_trace(rng, n=900, key_space=24, size_mode="uniform")
+        spec = f"wtlfu-av-slru?window_frac=0.1&seed={DIFF_SEED}&sketch_backend=cms"
+        cap = max(300, int(np.mean(sizes) * 10))
+        a, ha = _run_plane(spec, cap, keys, sizes, "scalar", expected_entries=64)
+        e, he = _run_plane_chunked(spec, cap, keys, sizes, "device_full",
+                                   expected_entries=64, chunk=16)
+        e.sync_deferred()
+        _assert_identical(a, e, ha, he, f"{spec} slru")
+        assert len(a.main.protected) > 0, "no promotions happened: weak test"
+        assert list(a.main.probation) == list(e.main.probation)
+        assert list(a.main.protected) == list(e.main.protected)
+        assert a.main.protected_bytes == e.main.protected_bytes
+
+    @pytest.mark.parametrize("admission,eviction",
+                             [("iv", "random"), ("qv", "sampled_needed_size"),
+                              ("av", "slru")])
+    def test_forced_aging_resync(self, admission, eviction):
+        """A tiny sketch forces aging resets mid-chunk: the boundary access
+        replays through the host path (counted as an ``aging`` resync) and
+        the sketch ages at the exact same stream positions as scalar."""
+        rng = np.random.default_rng([DIFF_SEED, 0xA6E, _combo_key(admission, eviction)])
+        keys, sizes = _synth_trace(rng, n=400, key_space=40, size_mode="clustered")
+        cap = max(120, int(np.mean(sizes) * 8))
+        spec = f"wtlfu-{admission}-{eviction}?seed={DIFF_SEED}&sketch_backend=cms"
+        a, ha = _run_plane(spec, cap, keys, sizes, "scalar", expected_entries=16)
+        e, he = _run_plane_chunked(spec, cap, keys, sizes, "device_full",
+                                   expected_entries=16, chunk=8)
+        e.sync_deferred()
+        assert a.sketch.resets > 0, "trace too short to age the sketch"
+        assert a.sketch.resets == e.sketch.resets
+        pipe = e._device_pipeline
+        assert pipe.resync_reasons["aging"] > 0, "aging resync never forced"
+        assert pipe.resyncs == sum(pipe.resync_reasons.values())
+        _assert_identical(a, e, ha, he, f"{spec} across resets")
+
+    def test_forced_mirror_grow_resync(self):
+        """A trace whose live-entry count keeps growing outruns the initial
+        device slot arrays: the mirror zero-pads ON DEVICE (counted as a
+        ``mirror_grow`` resync, no full re-upload) and identity holds."""
+        rng = np.random.default_rng([DIFF_SEED, 0x960])
+        n = 1600
+        keys = np.arange(n, dtype=np.int64)  # all-miss: contents only grow
+        keys[1::4] = keys[0::4][: len(keys[1::4])]  # some repeats for hits
+        sizes = rng.integers(1, 6, size=n).astype(np.int64).tolist()
+        spec = f"wtlfu-av-sampled_frequency?seed={DIFF_SEED}&sketch_backend=cms"
+        a, ha = _run_plane(spec, 10**6, keys.tolist(), sizes, "scalar",
+                           expected_entries=4096)
+        e, he = _run_plane_chunked(spec, 10**6, keys.tolist(), sizes,
+                                   "device_full", expected_entries=4096,
+                                   chunk=64)
+        e.sync_deferred()
+        pipe = e._device_pipeline
+        assert pipe.resync_reasons["mirror_grow"] > 0, "growth never forced"
+        assert pipe.resync_reasons["aging"] == 0
+        # growth is device-side padding, not a host re-upload
+        assert pipe.uploads == 1
+        _assert_identical(a, e, ha, he, f"{spec} across growth")
 
 
 class TestHypothesisDifferential:

@@ -46,9 +46,39 @@ class TestBenchTrajectory:
         m.BENCH_OVERHEAD_PATH.write_text(json.dumps(legacy))
         m.write_bench_overhead([{"policy": "new", "us_per_access": 1.0}])
         data = json.loads(m.BENCH_OVERHEAD_PATH.read_text())
-        assert [e["timestamp"] for e in data["history"]][0] is None  # legacy entry
+        # ISSUE 7 satellite: the migrated entry is dated (file mtime), not null
+        stamps = [e["timestamp"] for e in data["history"]]
+        assert all(stamps), f"null timestamp persisted: {stamps}"
         assert data["history"][0]["rows"] == legacy
         assert data["history"][1]["rows"][0]["policy"] == "new"
+
+    def test_null_timestamps_backfilled_on_load(self, tmp_path):
+        """ISSUE 7 satellite regression: entries persisted with
+        ``"timestamp": null`` (the pre-fix legacy migration) are
+        backfilled from the file's mtime on load — UTC ISO-8601, parseable
+        and ordered before the new append."""
+        import datetime
+        import os
+
+        m = self._module()
+        m.BENCH_OVERHEAD_PATH = tmp_path / "BENCH_overhead.json"
+        stale = {"schema": 2, "history": [
+            {"timestamp": None, "rows": [{"policy": "p", "data_plane": "d",
+                                          "trace": "t", "capacity": 1,
+                                          "accesses_per_sec": 5.0}]},
+        ]}
+        m.BENCH_OVERHEAD_PATH.write_text(json.dumps(stale))
+        mtime = 1_700_000_000
+        os.utime(m.BENCH_OVERHEAD_PATH, (mtime, mtime))
+        m.write_bench_overhead([{"policy": "p", "data_plane": "d",
+                                 "trace": "t", "capacity": 1,
+                                 "us_per_access": 1.0}])
+        data = json.loads(m.BENCH_OVERHEAD_PATH.read_text())
+        t0, t1 = (e["timestamp"] for e in data["history"])
+        assert t0 == datetime.datetime.fromtimestamp(
+            mtime, datetime.timezone.utc).isoformat(timespec="seconds")
+        assert datetime.datetime.fromisoformat(t0) < \
+            datetime.datetime.fromisoformat(t1)
 
     def test_history_is_capped(self, tmp_path):
         m = self._module()
@@ -58,6 +88,51 @@ class TestBenchTrajectory:
             m.write_bench_overhead([{"policy": "p", "us_per_access": 1.0}])
         data = json.loads(m.BENCH_OVERHEAD_PATH.read_text())
         assert len(data["history"]) == 3
+
+    def _row(self, aps, policy="p", plane="device_full"):
+        return {"policy": policy, "us_per_access": 1e6 / aps,
+                "data_plane": plane, "trace": "t", "capacity": 1}
+
+    def test_regression_flagged_in_entry(self, tmp_path):
+        """ISSUE 7 satellite: a >15% accesses/sec drop vs the most recent
+        prior run of the same (policy, data_plane, trace, capacity) row
+        gets a visible marker in the appended JSON entry; smaller moves
+        and improvements do not."""
+        m = self._module()
+        m.BENCH_OVERHEAD_PATH = tmp_path / "BENCH_overhead.json"
+        m.write_bench_overhead([self._row(1000.0), self._row(1000.0, "q")])
+        m.write_bench_overhead([self._row(900.0), self._row(1100.0, "q")])
+        data = json.loads(m.BENCH_OVERHEAD_PATH.read_text())
+        assert "regressions" not in data["history"][-1]  # -10%: tolerated
+        assert all("regression" not in r for r in data["history"][-1]["rows"])
+        m.write_bench_overhead([self._row(700.0), self._row(1100.0, "q")])
+        data = json.loads(m.BENCH_OVERHEAD_PATH.read_text())
+        entry = data["history"][-1]
+        assert entry["regressions"] == 1
+        flagged = [r for r in entry["rows"] if "regression" in r]
+        assert [r["policy"] for r in flagged] == ["p"]
+        reg = flagged[0]["regression"]
+        assert reg["baseline_accesses_per_sec"] == 900.0  # most recent prior
+        assert reg["change"] == pytest.approx(700.0 / 900.0 - 1.0, abs=1e-4)
+        assert reg["baseline_timestamp"]
+
+    def test_regression_strict_mode_fails_after_persisting(self, tmp_path,
+                                                           monkeypatch):
+        """REPRO_BENCH_STRICT turns a flagged regression into a failed run
+        — but only after the flagged entry is written (the marker is the
+        record; the failure is the enforcement)."""
+        m = self._module()
+        m.BENCH_OVERHEAD_PATH = tmp_path / "BENCH_overhead.json"
+        m.write_bench_overhead([self._row(1000.0)])
+        monkeypatch.setenv("REPRO_BENCH_STRICT", "1")
+        with pytest.raises(SystemExit, match="regressed"):
+            m.write_bench_overhead([self._row(500.0)])
+        data = json.loads(m.BENCH_OVERHEAD_PATH.read_text())
+        assert data["history"][-1]["regressions"] == 1
+        # a clean run under strict mode appends normally
+        m.write_bench_overhead([self._row(1000.0)])
+        assert len(json.loads(
+            m.BENCH_OVERHEAD_PATH.read_text())["history"]) == 3
 
 
 @pytest.fixture(scope="module")

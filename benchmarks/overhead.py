@@ -55,7 +55,7 @@ import time
 
 from repro.core import REGISTRY, PolicySpec, SimulationEngine
 
-from .common import PAPER_TRACES, emit, get_trace, run_policy
+from .common import PAPER_TRACES, emit, get_trace, run_policy, sequential_mode
 
 POLICIES = ("lru", "wtlfu-av", "wtlfu-qv", "wtlfu-iv", "gdsf", "adaptsize", "lhd", "lrb")
 FRACS = (0.001, 0.01, 0.1)
@@ -324,6 +324,119 @@ def device_full_rows(traces=("msr2",), frac=0.001,
     return rows
 
 
+#: Per-instance seeds of the fleet sweep: DEVICE_FULL_POLICIES x seeds
+#: instances in one FleetEngine — the "whole policy grid in one launch"
+#: claim, measured against the same instances run as a sequential loop.
+FLEET_SEEDS = (0, 1, 2, 3)
+#: Access-chunk size both arms of the fleet comparison run at. The fleet
+#: claim is dispatch amortization, so the sweep measures the fine-chunk
+#: operating point where per-launch overhead dominates the scan body and
+#: a sequential loop pays it once per instance per chunk (the fleet once
+#: per shape-bucket per chunk). Finer chunks are also the low-latency
+#: end of the device plane's sync-cadence knob, not a synthetic setting.
+#: At the default chunk (64) the scan body dominates and vmapping its
+#: both-branch ``lax.cond`` lanes roughly breaks even on XLA-CPU.
+FLEET_CHUNK = 8
+
+
+def fleet_rows(traces=("msr2",), frac=0.001, seeds=FLEET_SEEDS,
+               limit=DEVICE_PLANE_LIMIT, chunk=FLEET_CHUNK) -> list[dict]:
+    """Vmapped fleet sweep vs the sequential ``device_full`` loop.
+
+    The same ``len(DEVICE_FULL_POLICIES) * len(seeds)`` instances (every
+    policy combo x per-instance seed, one shape-bucket per combo) are
+    driven twice: once as the sequential per-policy loop the sweeps used
+    to be, once stacked in one :class:`repro.kernels.fleet.FleetEngine`
+    (one vmapped launch per shape-bucket per chunk), both at the same
+    ``chunk`` (see :data:`FLEET_CHUNK`). Both arms are warmed untimed
+    first. Per-instance hit ratios must match exactly (hard ``raise``);
+    ``fleet_speedup`` = sequential wall over fleet wall — the tentpole
+    number, from amortizing per-launch dispatch over the bucket.
+    """
+    import numpy as np
+
+    from repro.kernels.fleet import FleetEngine
+
+    rows = []
+    for tname in traces:
+        tr = get_trace(tname)
+        cap = max(1, int(tr.total_object_bytes * frac))
+        ee = max(64, int(cap / max(1.0, tr.mean_object_size)))
+        specs = [
+            PolicySpec.parse(pol).with_params(
+                data_plane="device_full", sketch_backend="cms", seed=s)
+            for pol in DEVICE_FULL_POLICIES for s in seeds
+        ]
+        keys = np.asarray(tr.keys[:limit], np.int64)
+        sizes = np.asarray(tr.sizes[:limit], np.int64)
+
+        def build(sp):
+            return REGISTRY.build(sp, cap, expected_entries=ee, chunk=chunk)
+
+        # sequential arm: warm (one instance per policy compiles its shape
+        # bucket; seeds share the compiled kernels), then timed
+        for sp in specs[:: len(seeds)]:
+            SimulationEngine().run(build(sp), tr, limit=limit)
+        t0 = time.perf_counter()
+        seq = []
+        for sp in specs:
+            p = build(sp)
+            SimulationEngine().run(p, tr, limit=limit)
+            seq.append(p)
+        seq_wall = time.perf_counter() - t0
+
+        # fleet arm: warm, then timed
+        warm = FleetEngine(collect_hits=False)
+        for sp in specs:
+            warm.add(build(sp), keys, sizes, label=sp.to_string())
+        warm.run()
+        eng = FleetEngine(collect_hits=False)
+        members = [eng.add(build(sp), keys, sizes, label=sp.to_string())
+                   for sp in specs]
+        t0 = time.perf_counter()
+        eng.run()
+        fleet_wall = time.perf_counter() - t0
+
+        total = sum(m.policy.stats.accesses for m in members) or 1
+        speedup = round(seq_wall / max(1e-9, fleet_wall), 3)
+        for sp, sp_seq, m in zip(specs, seq, members):
+            hr_seq = round(sp_seq.stats.hit_ratio, 5)
+            hr_fleet = round(m.policy.stats.hit_ratio, 5)
+            if (hr_seq != hr_fleet
+                    or sp_seq.stats.accesses != m.policy.stats.accesses):
+                raise AssertionError(
+                    f"{sp.to_string()}: fleet diverged from sequential "
+                    f"device_full ({hr_fleet} vs {hr_seq})")
+            rows.append({
+                "policy": sp.to_string(),
+                "trace": tr.name,
+                "capacity": cap,
+                "frac": frac,
+                "accesses": m.policy.stats.accesses,
+                "hit_ratio": hr_fleet,
+                "us_per_access": round(fleet_wall / total * 1e6, 3),
+                "wall_s": round(fleet_wall, 3),
+                "data_plane": "device_full",
+                "mode": "fleet",
+                "chunk": chunk,
+                "warmed": True,
+                "hit_ratio_matches_sequential": True,
+                "fleet_speedup": speedup,
+            })
+        rows.append({
+            "label": "fleet_vs_sequential",
+            "trace": tr.name,
+            "capacity": cap,
+            "chunk": chunk,
+            "n_instances": len(specs),
+            "fleet_launches": eng.launches,
+            "sequential_wall_s": round(seq_wall, 3),
+            "fleet_wall_s": round(fleet_wall, 3),
+            "fleet_speedup": speedup,
+        })
+    return rows
+
+
 def main(traces=PAPER_TRACES, fracs=FRACS) -> list[dict]:
     rows = []
     for tname in traces:
@@ -360,6 +473,8 @@ def main(traces=PAPER_TRACES, fracs=FRACS) -> list[dict]:
     rows.extend(device_plane_rows())
     rows.extend(device_batched_rows())
     rows.extend(device_full_rows())
+    if not sequential_mode():
+        rows.extend(fleet_rows())
     rows.extend(sketch_data_plane_rows())
     emit("overhead", rows, derived_key="overhead_us")
     return rows

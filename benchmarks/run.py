@@ -21,9 +21,16 @@ as one entry; entries persisted without a timestamp are backfilled from
 the file's mtime on load, so every entry is dated. History is capped at
 the most recent ``BENCH_HISTORY_MAX`` entries. Each append compares its
 rows against the trajectory baseline: a >15% accesses/sec drop for any
-``(policy, data_plane, trace, capacity)`` row flags the row in the
-written entry and — under ``REPRO_BENCH_STRICT=1`` (the nightly bench
-jobs) — fails the run.
+``(policy, data_plane, trace, capacity, backend, mode)`` row flags the
+row in the written entry and — under ``REPRO_BENCH_STRICT=1`` (the
+nightly bench jobs) — fails the run. The key includes the hardware
+backend and the drive mode (vmapped fleet vs sequential) so a CPU row
+landing after an accelerator row, or a per-policy-loop row after a fleet
+row, can never raise a false regression.
+
+Flags: ``--quick`` (smoke tier), ``--sequential`` (bypass the vmapped
+fleet sweep path in state_of_art/robustness/overhead; also honored as
+``REPRO_BENCH_SEQUENTIAL=1``).
 """
 
 from __future__ import annotations
@@ -79,9 +86,24 @@ def _load_bench_history(path: pathlib.Path) -> "list[dict]":
 _GATED_METRICS = ("accesses_per_sec", "requests_per_sec")
 
 
+def _hw_backend() -> str:
+    """The hardware identity recorded on trajectory rows: a CPU run must
+    never be gated against a faster accelerator baseline."""
+    try:
+        import jax
+
+        return jax.default_backend()
+    except Exception:
+        return "cpu"
+
+
 def _row_key(r: dict) -> tuple:
+    # full row identity: benchmark config (policy/admission/trace/capacity),
+    # data plane, hardware backend, and drive mode (fleet vs sequential) —
+    # a row may only be compared against a prior run of the SAME thing
     return tuple(r.get(k) for k in ("policy", "data_plane", "admission",
-                                    "arch", "trace", "capacity"))
+                                    "arch", "trace", "capacity",
+                                    "backend", "mode"))
 
 
 def _row_metric(r: dict) -> "tuple[str, float] | None":
@@ -159,12 +181,15 @@ def _append_trajectory(path: pathlib.Path, rows: "list[dict]") -> None:
 
 def write_bench_overhead(rows: "list[dict]") -> None:
     """Append this run's condensed overhead rows to the perf trajectory."""
+    backend = _hw_backend()
     out = [
         {
             "policy": r["policy"],
             "data_plane": r.get("data_plane"),
             "trace": r.get("trace"),
             "capacity": r.get("capacity"),
+            "backend": backend,
+            "mode": r.get("mode"),
             "accesses_per_sec": round(1e6 / max(r["us_per_access"], 1e-9), 1),
         }
         for r in rows
@@ -181,8 +206,9 @@ def write_bench_serving(rows: "list[dict]") -> None:
         "max_queue_depth", "request_hit_ratio", "token_hit_ratio",
         "byte_hit_ratio",
     )
-    out = [{k: r.get(k) for k in keep} for r in rows
-           if r.get("bench") == "serving_load"]
+    backend = _hw_backend()
+    out = [{**{k: r.get(k) for k in keep}, "backend": backend}
+           for r in rows if r.get("bench") == "serving_load"]
     _append_trajectory(BENCH_SERVING_PATH, out)
 
 
@@ -214,9 +240,10 @@ def main() -> None:
     args = sys.argv[1:]
     if "--quick" in args:  # smoke tier: tiny fixed-seed configs
         args.remove("--quick")
-        import os
-
         os.environ["REPRO_BENCH_QUICK"] = "1"
+    if "--sequential" in args:  # escape hatch: per-policy loops instead of
+        args.remove("--sequential")  # the vmapped fleet sweep path
+        os.environ["REPRO_BENCH_SEQUENTIAL"] = "1"
     selected = args or list(benches)
     print("name,us_per_call,derived")
     for name in selected:

@@ -273,6 +273,28 @@ class SizeAwareWTinyLFU:
             return True
         return False
 
+    def reclaim_victims(self, needed: int = 0):
+        """Yield resident keys in the order this policy would give them up
+        (serving-layer shortage reclaim asks the eviction policy instead of
+        discarding in insertion order). Main victims come first — the
+        eviction discipline's own candidate order, ``needed`` bytes worth
+        of context for the size-aware rules — then the window LRU→MRU
+        (window objects are the newest, least-proven residents, but main
+        victims are what the policy itself has already ranked as most
+        expendable). Never evicts; pair each taken key with
+        :meth:`discard`."""
+        self.sync_deferred()
+        self.main.begin_decision()  # sampling mains: fresh replayable draws
+        seen = set()
+        for key in self.main.iter_victims(needed):
+            if key not in seen:
+                seen.add(key)
+                yield key
+        for key in list(self.window):
+            if key not in seen:
+                seen.add(key)
+                yield key
+
     # -- hot path ------------------------------------------------------------
     def access(self, key: int, size: int) -> bool:
         pipe = self._device_pipeline

@@ -265,3 +265,28 @@ def logits_spec(mesh: Mesh) -> P:
     fsdp, tp = _axes(mesh)
     b = fsdp if len(fsdp) > 1 else (fsdp[0] if fsdp else None)
     return P(b, tp)
+
+
+# -- cache-fleet partitioning -------------------------------------------------
+
+def hash_partition(keys, num_shards: int, *, seed: int = 0):
+    """Deterministic shard assignment for cache keys: splitmix64-finalize
+    each key (salted by ``seed``) and reduce mod ``num_shards``.
+
+    This is the hash-partitioned-deployment model the fleet sweeps use
+    (``repro.kernels.fleet.FleetEngine.sharded``): every user key routes to
+    exactly one cache shard, independent of shard count ordering or trace
+    position, and the same splitmix64 finalizer as the policy counter-RNG
+    (:func:`repro.core.crng.mix64_vec`) keeps the stream well mixed for
+    adversarially clustered key spaces.
+    """
+    import numpy as np
+
+    from repro.core import crng
+
+    if num_shards < 1:
+        raise ValueError("num_shards must be >= 1")
+    u = np.ascontiguousarray(np.asarray(keys, np.int64)).view(np.uint64)
+    with np.errstate(over="ignore"):
+        salted = u + np.uint64((seed * crng.GOLDEN) & ((1 << 64) - 1))
+    return (crng.mix64_vec(salted) % np.uint64(num_shards)).astype(np.int64)

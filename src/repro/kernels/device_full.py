@@ -373,17 +373,11 @@ def _apply_evictions(mk_hi, mk_lo, msz, mstamp, mseg, sel, n, used, pbytes,
 
 # -- the whole-simulation scan kernel -----------------------------------------
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("discipline", "rule", "sample", "early_pruning",
-                     "adaptive", "main_kind", "cap", "use_pallas", "interpret"),
-    donate_argnums=(0, 1, 2, 3, 4, 5, 6, 7, 8, 9),
-)
-def _simulate_chunk(table, mk_hi, mk_lo, msz, mstamp, mseg,
-                    wk_hi, wk_lo, wsz, wstamp,
-                    xs_hi, xs_lo, xs_sz, scal, key_limbs,
-                    *, discipline, rule, sample, early_pruning, adaptive,
-                    main_kind, cap, use_pallas, interpret):
+def _simulate_chunk_impl(table, mk_hi, mk_lo, msz, mstamp, mseg,
+                         wk_hi, wk_lo, wsz, wstamp,
+                         xs_hi, xs_lo, xs_sz, scal, key_limbs,
+                         *, discipline, rule, sample, early_pruning, adaptive,
+                         main_kind, cap, use_pallas, interpret):
     """One whole trace chunk as a single ``lax.scan`` launch.
 
     State buffers (donated — steady-state chunks alias instead of
@@ -763,6 +757,17 @@ def _simulate_chunk(table, mk_hi, mk_lo, msz, mstamp, mseg,
             scal_out, limbs_out, hits)
 
 
+#: single-instance entry point — the un-jitted ``_simulate_chunk_impl`` stays
+#: importable so :mod:`repro.kernels.fleet` can ``vmap`` it across stacked
+#: instances under its own jit.
+_simulate_chunk = jax.jit(
+    _simulate_chunk_impl,
+    static_argnames=("discipline", "rule", "sample", "early_pruning",
+                     "adaptive", "main_kind", "cap", "use_pallas", "interpret"),
+    donate_argnums=(0, 1, 2, 3, 4, 5, 6, 7, 8, 9),
+)
+
+
 # -- host-side plane ----------------------------------------------------------
 
 def _limbs_of(arr_i64: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -797,6 +802,12 @@ class OrderedDeviceMirror:
         self.stale = True  # host is (or may have gone) ahead: re-upload
         self.uploads = 0  # full host->device uploads
         self.grows = 0  # on-device capacity growths
+        # high-water marks: once the mirror has grown, later re-uploads
+        # (e.g. after an aging resync) must not shrink below the grown
+        # size, or a capacity hovering at the slot boundary re-triggers a
+        # mirror_grow resync every upload cycle
+        self.hiwater = 0
+        self.whiwater = 0
 
     def upload(self, rows, window_items, sampled: bool, take: int):
         """Build the device arrays from the policy snapshot. ``rows`` are
@@ -805,8 +816,10 @@ class OrderedDeviceMirror:
         launch length (slack so no in-scan insert can overflow)."""
         n0 = len(rows)
         wn0 = len(window_items)
-        slots = _next_pow2(max(64, n0 + wn0 + take))
-        wslots = _next_pow2(max(64, wn0 + take))
+        slots = max(_next_pow2(max(64, n0 + wn0 + take)), self.hiwater)
+        wslots = max(_next_pow2(max(64, wn0 + take)), self.whiwater)
+        self.hiwater = slots
+        self.whiwater = wslots
         keys = np.asarray([r[0] for r in rows], np.int64)
         mk_hi = np.zeros(slots, np.int32)
         mk_lo = np.zeros(slots, np.int32)
@@ -846,6 +859,8 @@ class OrderedDeviceMirror:
         """Zero-pad the device arrays in place (device-side copy only)."""
         slots = _next_pow2(max(self.slots, slots))
         wslots = _next_pow2(max(self.wslots, wslots))
+        self.hiwater = max(self.hiwater, slots)
+        self.whiwater = max(self.whiwater, wslots)
         if slots > self.slots:
             self.main = tuple(
                 jnp.zeros(slots, a.dtype).at[: self.slots].set(a)
@@ -947,6 +962,9 @@ class DeviceFullSimulationPlane:
         self.deferred_dispatches = 0
         self._inflight: "_InFlightSim | None" = None
         self._host_auth = True  # host structures current?
+        #: set by repro.kernels.fleet while this instance is enrolled in a
+        #: vmapped fleet: lane-materialization callback run by ensure_host
+        self._fleet_restore = None
         # device-side shadows (committed scalars the host can't derive
         # without a download)
         self._n = 0
@@ -1019,7 +1037,12 @@ class DeviceFullSimulationPlane:
             i += take
         return hits
 
-    def _dispatch(self, pol, khi, klo, szs, take) -> "_InFlightSim":
+    def _preflight(self, pol, take) -> bool:
+        """Upload-or-grow the mirror ahead of a ``take``-access launch.
+        Re-uploads (with chunk-width slack and the high-water floor) when
+        the host went authoritative; otherwise grows on device when the
+        worst case of ``take`` inserts could overflow the slot arrays.
+        Returns True when a full upload happened."""
         sk = self.sketch
         main = self.main
         if self.mirror.stale:
@@ -1028,18 +1051,27 @@ class DeviceFullSimulationPlane:
                     "device_full: stale mirror with device-authoritative "
                     "state (internal invariant violation)")
             rows = main.export_rows()
-            if self.sampled and len(rows) + len(pol.window) + take >= MAX_MIRROR_ENTRIES:
+            slack = max(take, self.chunk)
+            if self.sampled and len(rows) + len(pol.window) + slack >= MAX_MIRROR_ENTRIES:
                 raise ValueError(
                     f"device plane supports < {MAX_MIRROR_ENTRIES} entries")
             n0, wn0, tick0 = self.mirror.upload(
-                rows, list(pol.window.items()), self.sampled, take)
+                rows, list(pol.window.items()), self.sampled, slack)
             self._n, self._wn, self._tick = n0, wn0, tick0
             self._pbytes = int(getattr(main, "protected_bytes", 0))
-        elif (self._n + self._wn + take > self.mirror.slots
-              or self._wn + take > self.mirror.wslots):
-            self.mirror.grow(self._n + self._wn + take, self._wn + take)
+            return True
+        if (self._n + self._wn + take > self.mirror.slots
+                or self._wn + take > self.mirror.wslots):
+            self.mirror.grow(self._n + self._wn + max(take, self.chunk),
+                             self._wn + max(take, self.chunk))
             self.resyncs += 1
             self.resync_reasons["mirror_grow"] += 1
+        return False
+
+    def _pack_scal(self, pol, take) -> np.ndarray:
+        """Pack the scalar carry/const vector for a ``take``-access launch
+        from the committed shadows + the policy's adaptive-climber state."""
+        main = self.main
         prev_ratio = pol._adapt_prev_ratio
         prev_num = (-1 if prev_ratio < 0
                     else int(round(prev_ratio * pol._adapt_every)))
@@ -1060,11 +1092,35 @@ class DeviceFullSimulationPlane:
             ("win_max", pol.capacity // 2), ("a_n", take),
         ):
             vals[_SCAL_IDX[name]] = v
-        scal = np.asarray(vals, np.int64).astype(np.int32)
+        return np.asarray(vals, np.int64).astype(np.int32)
+
+    def _rng_limbs(self) -> np.ndarray:
+        """The unmixed counter-RNG stream key as uint32 limbs (replayable:
+        derived from the main's seed + decision counter, never consumed)."""
+        main = self.main
         seed = int(getattr(main, "seed", 0))
         decision = int(getattr(main, "decision", 0))
         key0 = (seed * crng.GOLDEN + decision * crng.GAMMA) & ((1 << 64) - 1)
-        limbs = np.asarray([key0 >> 32, key0 & 0xFFFFFFFF], np.uint32)
+        return np.asarray([key0 >> 32, key0 & 0xFFFFFFFF], np.uint32)
+
+    def _statics(self, pol) -> dict:
+        """The kernel's static kwargs — also the fleet's shape-bucket key
+        (together with the sketch table shape)."""
+        main = self.main
+        return dict(
+            discipline=self.device.discipline,
+            rule=getattr(main, "rule", "frequency"),
+            sample=int(getattr(main, "SAMPLE", 5)),
+            early_pruning=self.device.early_pruning,
+            adaptive=bool(pol.adaptive_window), main_kind=self.main_kind,
+            cap=self.sketch.cap, use_pallas=self.sketch.use_pallas,
+            interpret=self.device._interpret)
+
+    def _dispatch(self, pol, khi, klo, szs, take) -> "_InFlightSim":
+        sk = self.sketch
+        self._preflight(pol, take)
+        scal = self._pack_scal(pol, take)
+        limbs = self._rng_limbs()
         pad = _next_pow2(max(8, take))
         xhi = np.zeros(pad, np.int32)
         xlo = np.zeros(pad, np.int32)
@@ -1076,13 +1132,7 @@ class DeviceFullSimulationPlane:
             sk.table, *self.mirror.main, *self.mirror.window,
             jnp.asarray(xhi), jnp.asarray(xlo), jnp.asarray(xsz),
             jnp.asarray(scal), jnp.asarray(limbs),
-            discipline=self.device.discipline,
-            rule=getattr(main, "rule", "frequency"),
-            sample=int(getattr(main, "SAMPLE", 5)),
-            early_pruning=self.device.early_pruning,
-            adaptive=bool(pol.adaptive_window), main_kind=self.main_kind,
-            cap=sk.cap, use_pallas=sk.use_pallas,
-            interpret=self.device._interpret)
+            **self._statics(pol))
         self.chunk_calls += 1
         # adopt the async results immediately: the inputs were donated
         sk.table = outs[0]
@@ -1150,6 +1200,11 @@ class DeviceFullSimulationPlane:
         self._collect(pol)
         if self._host_auth:
             return
+        if self._fleet_restore is not None:
+            # enrolled in a vmapped fleet: the authoritative state lives in
+            # the fleet's stacked buffers — materialize this instance's lane
+            # into the mirror (and sketch table) before downloading
+            self._fleet_restore()
         rows, window_items = self.mirror.download(
             self._n, self._wn, self.sampled)
         self.main.load_rows(rows)

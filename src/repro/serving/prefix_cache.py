@@ -180,11 +180,32 @@ class PrefixCache:
         return True
 
     # -- BlockPool admission hook (shared-pool reclaim) ---------------------
+    def _reclaim_order(self, n: int):
+        """Resident entry keys in shortage-reclaim order: the eviction
+        policy's own victim ranking first (``reclaim_victims``, with the
+        byte shortage as sizing context), then any residents the policy's
+        bounded victim walk did not reach, oldest materialized first."""
+        victims = getattr(self.policy, "reclaim_victims", None)
+        order: list[int] = []
+        ranked = set()
+        if victims is not None:
+            # materialize BEFORE discarding anything: the ranking walks the
+            # policy's live structures, which each discard mutates
+            for key in victims(n * self.block_bytes):
+                if key in self.entries and key not in ranked:
+                    ranked.add(key)
+                    order.append(key)
+        order.extend(k for k in self.entries if k not in ranked)
+        return order
+
     def reclaim_blocks(self, n: int) -> int:
-        """Free up to ``n`` blocks by force-evicting resident entries
-        (oldest materialized first). Called by the pool's admission hook
-        when a live (scheduler) allocation comes up short. Returns the
-        number of blocks actually freed."""
+        """Free up to ``n`` blocks by force-evicting resident entries in
+        the eviction policy's victim order. Called by the pool's admission
+        hook when a live (scheduler) allocation comes up short. Returns
+        the number of blocks actually freed; a nested call (re-entry via
+        ``policy.discard`` → pipeline sync → pool traffic) honestly
+        reports 0 freed blocks and leaves all accounting to the outer
+        call."""
         if self._reclaiming:
             return 0
         self._reclaiming = True
@@ -192,10 +213,12 @@ class PrefixCache:
             self._resolve()
             freed = 0
             discard = getattr(self.policy, "discard", None)
-            for key in list(self.entries):
+            for key in self._reclaim_order(n):
                 if freed >= n:
                     break
-                e = self.entries.pop(key)
+                e = self.entries.pop(key, None)
+                if e is None:
+                    continue  # a nested path raced this key away
                 if discard is not None:
                     discard(key)  # keep policy byte-accounting honest
                 self.pool.unref(e.block_ids)

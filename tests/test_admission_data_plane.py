@@ -731,6 +731,37 @@ class TestDeviceFullPlane:
             assert p.admission_policy._device.calls == 0, eviction
             assert p.stats.hits > 0, f"{eviction}: hit path never exercised"
 
+    def test_mirror_grow_bounded_across_aging_resyncs(self):
+        """ISSUE 8 satellite (failing before): every aging resync marks
+        the mirror stale, and the re-upload used to size the slot arrays
+        back DOWN to the live set — so a workload whose live-entry count
+        swings across a power-of-two boundary re-triggered ``mirror_grow``
+        every aging cycle. The high-water floor keeps re-uploads at the
+        largest size ever provisioned: grows happen only while the
+        high-water mark is still being established, bounded for the whole
+        run instead of per cycle."""
+        p = REGISTRY.build(
+            "wtlfu-qv-sampled_frequency?data_plane=device_full&chunk=8",
+            300, expected_entries=16)
+        pipe = p._device_pipeline
+        # phases alternate tiny and large objects: the live count swings
+        # between ~300 entries (needs 512 slots) and ~6 (fits the 64
+        # minimum), with the small sketch sample forcing frequent aging
+        keys = np.arange(8 * 400, dtype=np.int64)
+        sizes = np.concatenate([
+            np.full(400, 1 if ph % 2 == 0 else 50, np.int64)
+            for ph in range(8)])
+        for lo in range(0, len(keys), 64):
+            p.access_batch(keys[lo:lo + 64], sizes[lo:lo + 64])
+        p.sync_deferred()
+        assert pipe.resync_reasons["aging"] >= 20, \
+            "aging churn never materialized — the scenario is inert"
+        assert pipe.resync_reasons["mirror_grow"] <= 3, (
+            "mirror_grow thrash: re-uploads are shrinking the mirror "
+            f"below its high-water mark ({dict(pipe.resync_reasons)})")
+        # the floor itself persisted through every shrink-phase re-upload
+        assert pipe.mirror.slots == pipe.mirror.hiwater == 512
+
     def test_donated_buffers_adopted_identity(self):
         """ISSUE 7 satellite: the scan entry point donates the packed
         state buffers, and the plane adopts the launch outputs immediately

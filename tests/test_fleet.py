@@ -1,0 +1,176 @@
+"""Engine-level tests for :mod:`repro.kernels.fleet` (ISSUE 8 tentpole).
+
+The differential suite (``test_property_differential.TestFleetDifferential``)
+pins byte-identity of fleet members vs the sequential ``device_full`` loop;
+this file pins the ORCHESTRATION contract of :class:`FleetEngine` itself:
+shape-bucketing, launch amortization, snapshot cadence, hash-sharded
+deployments, and enrollment safety.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import REGISTRY
+from repro.core.engine import SimulationEngine
+from repro.distributed.sharding import hash_partition
+from repro.kernels.fleet import FleetEngine, fleet_plane_of
+
+SPEC = "wtlfu-qv-sampled_frequency?seed={s}&sketch_backend=cms"
+KW = dict(data_plane="device_full", expected_entries=64, chunk=16)
+
+
+def _trace(n=200, key_space=40, seed=7):
+    rng = np.random.default_rng(seed)
+    keys = rng.zipf(1.2, size=n).astype(np.int64) % key_space
+    sizes = rng.integers(1, 9, size=n).astype(np.int64)
+    return keys, sizes
+
+
+def _build(spec_seed=0, cap=400, **over):
+    kw = dict(KW, **over)
+    return REGISTRY.build(SPEC.format(s=spec_seed), cap, **kw)
+
+
+class TestBucketing:
+    def test_same_statics_share_a_bucket(self):
+        keys, sizes = _trace()
+        eng = FleetEngine()
+        for s in range(4):  # seed is per-lane state, not a kernel static
+            eng.add(_build(spec_seed=s), keys, sizes)
+        eng._enroll()
+        try:
+            assert len(eng.buckets) == 1
+            (b,) = eng.buckets.values()
+            assert [m.lane for m in b.members] == [0, 1, 2, 3]
+        finally:
+            eng._release()
+
+    def test_distinct_statics_split_buckets(self):
+        keys, sizes = _trace()
+        eng = FleetEngine()
+        eng.add(_build(spec_seed=0), keys, sizes)
+        eng.add(_build(spec_seed=1), keys, sizes)
+        eng.add(REGISTRY.build(
+            "wtlfu-av-lru?seed=0&sketch_backend=cms", 400, **KW),
+            keys, sizes)
+        eng._enroll()
+        try:
+            assert len(eng.buckets) == 2
+            assert sorted(len(b.members) for b in eng.buckets.values()) \
+                == [1, 2]
+        finally:
+            eng._release()
+
+    def test_release_restores_host_authority(self):
+        keys, sizes = _trace()
+        eng = FleetEngine()
+        ms = [eng.add(_build(spec_seed=s), keys, sizes) for s in range(2)]
+        eng.run()
+        assert eng.buckets == {}
+        for m in ms:
+            assert m.pipe._fleet_restore is None
+            assert m.policy.stats.accesses == len(keys)
+            # host-authoritative again: plain scalar access works
+            m.policy.sync_deferred()
+            m.policy.access(10**9, 1)
+
+
+class TestAmortization:
+    def test_one_launch_per_bucket_round(self):
+        keys, sizes = _trace(n=320)
+        eng = FleetEngine()
+        ms = [eng.add(_build(spec_seed=s), keys, sizes) for s in range(6)]
+        eng.run()
+        total_chunks = sum(fleet_plane_of(m.policy).chunk_calls for m in ms)
+        assert eng.launches < total_chunks
+        # all six lanes share statics -> every round is ONE launch, so the
+        # engine's launch count matches a single member's chunk count (plus
+        # any rounds shortened by per-lane resync scheduling)
+        per_member = max(fleet_plane_of(m.policy).chunk_calls for m in ms)
+        assert eng.launches <= per_member + 2
+
+    def test_uneven_trace_lengths_drain(self):
+        keys, sizes = _trace(n=300)
+        eng = FleetEngine()
+        m_long = eng.add(_build(spec_seed=0), keys, sizes)
+        m_short = eng.add(_build(spec_seed=1), keys[:37], sizes[:37])
+        eng.run()
+        assert m_long.policy.stats.accesses == 300
+        assert m_short.policy.stats.accesses == 37
+        assert len(m_long.hit_mask) == 300
+        assert len(m_short.hit_mask) == 37
+
+
+class TestSnapshots:
+    def test_snapshot_parity_with_sequential_engine(self):
+        keys, sizes = _trace(n=260)
+        fleet = FleetEngine(snapshot_every=50)
+        m = fleet.add(_build(spec_seed=3), keys, sizes)
+        fleet.run()
+        seq = SimulationEngine(snapshot_every=50).run(
+            _build(spec_seed=3), zip(keys.tolist(), sizes.tolist()))
+        assert [s.accesses for s in m.snapshots] == [50, 100, 150, 200, 250]
+        assert m.snapshots == seq.snapshots
+
+    def test_snapshot_every_validated(self):
+        with pytest.raises(ValueError):
+            FleetEngine(snapshot_every=0)
+
+    def test_collect_hits_off(self):
+        keys, sizes = _trace(n=64)
+        eng = FleetEngine(collect_hits=False)
+        m = eng.add(_build(), keys, sizes)
+        eng.run()
+        assert len(m.hit_mask) == 0
+        assert m.policy.stats.accesses == 64
+
+
+class TestSharded:
+    def test_hash_partition_covers_trace_disjointly(self):
+        keys, sizes = _trace(n=400, key_space=128)
+        pols = [_build(spec_seed=s) for s in range(3)]
+        eng = FleetEngine.sharded(pols, keys, sizes, seed=5)
+        assert sum(len(m.keys) for m in eng.members) == len(keys)
+        shard = hash_partition(keys, 3, seed=5)
+        for k, m in enumerate(eng.members):
+            np.testing.assert_array_equal(m.keys, keys[shard == k])
+            # routing is key-stable: every key in this shard maps back to it
+            assert set(np.unique(hash_partition(m.keys, 3, seed=5))) \
+                <= {k} or len(m.keys) == 0
+        eng.run()
+        assert sum(m.policy.stats.accesses for m in eng.members) == len(keys)
+
+    def test_shard_count_independence_of_order(self):
+        keys, _ = _trace(n=500, key_space=64)
+        a = hash_partition(keys, 4, seed=1)
+        b = hash_partition(keys[::-1], 4, seed=1)
+        np.testing.assert_array_equal(a, b[::-1])
+
+
+class TestEnrollmentSafety:
+    def test_double_enroll_raises(self):
+        keys, sizes = _trace(n=64)
+        p = _build()
+        eng1, eng2 = FleetEngine(), FleetEngine()
+        eng1.add(p, keys, sizes)
+        eng2.add(p, keys, sizes)
+        eng1._enroll()
+        try:
+            with pytest.raises(RuntimeError, match="already enrolled"):
+                eng2.run()
+        finally:
+            eng1._release()
+
+    def test_mismatched_trace_lengths_raise(self):
+        with pytest.raises(ValueError, match="equal length"):
+            FleetEngine().add(_build(), np.arange(5), np.arange(4))
+
+    def test_non_device_full_policy_rejected(self):
+        p = REGISTRY.build("wtlfu-qv-sampled_frequency", 400)
+        with pytest.raises((TypeError, ValueError)):
+            FleetEngine().add(p, np.arange(4), np.ones(4, np.int64))
+
+    def test_empty_engine_run_is_noop(self):
+        eng = FleetEngine()
+        assert eng.run() == []
+        assert eng.launches == 0

@@ -16,6 +16,11 @@ climber — in one ``lax.scan`` per chunk, cache state device-resident
 between chunks) must match on decisions, stats, final contents, window
 occupancy, and the adaptive ``window_cap`` trajectory, with host resyncs
 only on sketch aging resets and mirror growth (both test-forced below).
+ISSUE 8 adds the sixth column: every member of a vmapped
+``FleetEngine`` sweep (``TestFleetDifferential``) must match the
+sequential ``device_full`` loop per instance — hit stream, stats,
+contents, resync/upload counters — including test-forced per-lane aging
+and mirror-growth resyncs inside a mixed multi-bucket fleet.
 
 Four layers:
 
@@ -348,6 +353,122 @@ class TestDeviceFullResyncs:
         # growth is device-side padding, not a host re-upload
         assert pipe.uploads == 1
         _assert_identical(a, e, ha, he, f"{spec} across growth")
+
+
+class TestFleetDifferential:
+    """ISSUE 8 sixth column: the vmapped fleet drive. Every member of a
+    multi-instance :class:`repro.kernels.fleet.FleetEngine` — mixed
+    admission x eviction combos and per-instance seeds, shape-bucketed
+    into separate vmapped launches — must be byte-identical to the SAME
+    spec driven through the sequential ``device_full`` loop: hit stream,
+    ``CacheStats``, final contents, and the resync/upload counters (the
+    per-instance aging and mirror_grow paths are both test-forced)."""
+
+    #: one combo per eviction kind, admissions rotating — the shape-bucket
+    #: axes (rule, main kind, discipline) all vary across the fleet
+    COMBOS = [("iv", "random"), ("qv", "sampled_frequency"),
+              ("av", "slru"), ("av", "lru"),
+              ("qv", "sampled_needed_size"), ("iv", "sampled_frequency_size"),
+              ("av", "sampled_size")]
+    SEEDS = (DIFF_SEED, DIFF_SEED + 1)
+
+    def _sequential(self, spec, cap, keys, sizes, **kw):
+        # one access_batch over the whole trace — the same drive pattern
+        # the fleet uses, so chunk_calls line up exactly
+        p, hits = _run_plane_chunked(spec, cap, list(keys), list(sizes),
+                                     "device_full", step=len(keys), **kw)
+        p.sync_deferred()
+        return p, hits
+
+    def test_fleet_grid_byte_identical_to_sequential(self):
+        """The whole mixed grid rides ONE engine (7 combos x 2 seeds = 14
+        lanes over 7 shape-buckets), with a small sketch sample forcing
+        aging resyncs per instance mid-run."""
+        from repro.kernels.fleet import FleetEngine
+
+        rng = np.random.default_rng([DIFF_SEED, 0xF1EE7])
+        keys, sizes = _synth_trace(rng, n=300, key_space=40,
+                                   size_mode="clustered")
+        cap = max(120, int(np.mean(sizes) * 8))
+        specs = [
+            (f"wtlfu-{a}-{e}?window_frac=0.1&seed={seed}"
+             "&sketch_backend=cms")
+            for a, e in self.COMBOS for seed in self.SEEDS
+        ]
+        eng = FleetEngine()
+        members = [
+            eng.add(REGISTRY.build(s, cap, data_plane="device_full",
+                                   expected_entries=16, chunk=8),
+                    keys, sizes, label=s)
+            for s in specs
+        ]
+        eng.run()
+        assert len(eng.buckets) == 0  # released
+        aged = 0
+        for s, m in zip(specs, members):
+            a, ha = self._sequential(s, cap, keys, sizes,
+                                     expected_entries=16, chunk=8)
+            he = [bool(h) for h in m.hit_mask]
+            _assert_identical(a, m.policy, ha, he, f"fleet:{s}")
+            pa, pe = a._device_pipeline, m.policy._device_pipeline
+            assert dict(pa.resync_reasons) == dict(pe.resync_reasons), s
+            assert (pa.resyncs, pa.uploads, pa.chunk_calls) == \
+                (pe.resyncs, pe.uploads, pe.chunk_calls), s
+            aged += pe.resync_reasons["aging"]
+        assert aged > 0, "aging resync never forced on any instance"
+        # amortization invariant: the whole grid cost far fewer vmapped
+        # launches than the members' summed chunk count
+        total_chunks = sum(m.policy._device_pipeline.chunk_calls
+                           for m in members)
+        assert eng.launches < total_chunks, \
+            f"no amortization: {eng.launches} launches vs {total_chunks}"
+
+    def test_fleet_forced_mirror_grow_per_instance(self):
+        """A growing-live-set member forces ``mirror_grow`` on ITS lane
+        while a steady member shares the engine: both stay identical to
+        their sequential twins and the growth counters match per
+        instance."""
+        from repro.kernels.fleet import FleetEngine
+
+        rng = np.random.default_rng([DIFF_SEED, 0xF960])
+        n = 1200
+        gkeys = np.arange(n, dtype=np.int64)  # mostly-miss: contents grow
+        gkeys[1::4] = gkeys[0::4][: len(gkeys[1::4])]
+        gsizes = rng.integers(1, 6, size=n).astype(np.int64)
+        zkeys, zsizes = _synth_trace(rng, n=n, key_space=30,
+                                     size_mode="uniform")
+        grow_spec = (f"wtlfu-av-sampled_frequency?seed={DIFF_SEED}"
+                     "&sketch_backend=cms")
+        steady_spec = (f"wtlfu-qv-sampled_frequency?seed={DIFF_SEED}"
+                       "&sketch_backend=cms")
+        zcap = max(120, int(np.mean(zsizes) * 8))
+        eng = FleetEngine()
+        gm = eng.add(REGISTRY.build(grow_spec, 10**6,
+                                    data_plane="device_full",
+                                    expected_entries=4096, chunk=64),
+                     gkeys, gsizes)
+        zm = eng.add(REGISTRY.build(steady_spec, zcap,
+                                    data_plane="device_full",
+                                    expected_entries=4096, chunk=64),
+                     np.asarray(zkeys), np.asarray(zsizes))
+        eng.run()
+        ga, gha = self._sequential(grow_spec, 10**6, gkeys, gsizes,
+                                   expected_entries=4096, chunk=64)
+        za, zha = self._sequential(steady_spec, zcap, zkeys, zsizes,
+                                   expected_entries=4096, chunk=64)
+        for seq, seq_hits, m, label in ((ga, gha, gm, "grow"),
+                                        (za, zha, zm, "steady")):
+            he = [bool(h) for h in m.hit_mask]
+            _assert_identical(seq, m.policy, seq_hits, he, f"fleet:{label}")
+            pa, pe = seq._device_pipeline, m.policy._device_pipeline
+            assert dict(pa.resync_reasons) == dict(pe.resync_reasons), label
+            assert pa.uploads == pe.uploads, label
+        ggrow = gm.policy._device_pipeline.resync_reasons["mirror_grow"]
+        zgrow = zm.policy._device_pipeline.resync_reasons["mirror_grow"]
+        assert ggrow > 0, "growth never forced"
+        # growth is per-instance: the steady lane does not inherit the
+        # growing lane's resyncs
+        assert zgrow < ggrow
 
 
 class TestHypothesisDifferential:

@@ -116,6 +116,48 @@ class TestBenchTrajectory:
         assert reg["change"] == pytest.approx(700.0 / 900.0 - 1.0, abs=1e-4)
         assert reg["baseline_timestamp"]
 
+    def test_no_regression_across_hardware_backends(self, tmp_path):
+        """ISSUE 8 satellite (failing before): a row timed on a fast
+        accelerator must never become the baseline for a CPU run of the
+        same policy — the row key includes the hardware backend, so the
+        slower backend's first entry starts its own trajectory."""
+        m = self._module()
+        m.BENCH_OVERHEAD_PATH = tmp_path / "BENCH_overhead.json"
+        m._hw_backend = lambda: "tpu"
+        m.write_bench_overhead([self._row(100000.0)])
+        m._hw_backend = lambda: "cpu"
+        m.write_bench_overhead([self._row(1000.0)])  # 100x slower: new hw
+        data = json.loads(m.BENCH_OVERHEAD_PATH.read_text())
+        assert "regressions" not in data["history"][-1]
+        assert all("regression" not in r
+                   for r in data["history"][-1]["rows"])
+        # same backend again IS gated (positive control)
+        m.write_bench_overhead([self._row(500.0)])
+        data = json.loads(m.BENCH_OVERHEAD_PATH.read_text())
+        assert data["history"][-1]["regressions"] == 1
+
+    def test_no_regression_across_drive_modes(self, tmp_path):
+        """ISSUE 8 satellite (failing before): fleet rows amortize one
+        wall-clock over many members, so a fleet row and a sequential row
+        of the same policy are different measurements — the row key
+        includes the drive mode and neither baselines the other."""
+        m = self._module()
+        m.BENCH_OVERHEAD_PATH = tmp_path / "BENCH_overhead.json"
+        fleet = dict(self._row(10000.0), mode="fleet")
+        m.write_bench_overhead([fleet])
+        m.write_bench_overhead([self._row(1000.0)])  # sequential, 10x less
+        data = json.loads(m.BENCH_OVERHEAD_PATH.read_text())
+        assert "regressions" not in data["history"][-1]
+        # the recorded rows carry the identity fields the key needs
+        modes = [e["rows"][0].get("mode") for e in data["history"]]
+        assert modes == ["fleet", None]
+        assert all(e["rows"][0].get("backend")
+                   for e in data["history"])
+        # same mode again IS gated (positive control)
+        m.write_bench_overhead([dict(self._row(1000.0), mode="fleet")])
+        data = json.loads(m.BENCH_OVERHEAD_PATH.read_text())
+        assert data["history"][-1]["regressions"] == 1
+
     def test_regression_strict_mode_fails_after_persisting(self, tmp_path,
                                                            monkeypatch):
         """REPRO_BENCH_STRICT turns a flagged regression into a failed run
